@@ -1,0 +1,57 @@
+"""Fig. 2 — MFU of (non-agent) rollout under different DP sizes.
+
+Models the paper's §2.2 observation: large data-parallel rollout groups are
+efficient only while the effective batch is high; as the long tail drains,
+per-replica batch collapses and utilization falls. We draw response lengths
+from a lognormal (matching RLVR's long-tailed decoding), hand samples to DP
+replicas, and integrate per-GPU useful-token throughput over the rollout
+window.
+
+Output: MFU proxy (relative to a saturated replica) per DP size.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def rollout_mfu(dp_size: int, n_samples: int = 4096, seed: int = 0,
+                sat_batch: int = 32, sigma: float = 0.8) -> float:
+    """Fraction of saturated throughput achieved, integrated over the step.
+
+    Each replica decodes its shard of samples concurrently; a replica's
+    instantaneous efficiency is min(1, active/sat_batch). The step ends when
+    the LAST replica finishes (synchronous rollout barrier).
+    """
+    rng = np.random.default_rng(seed)
+    lengths = rng.lognormal(mean=5.0, sigma=sigma, size=n_samples)
+    shards = np.array_split(rng.permutation(lengths), dp_size)
+    t_end = max(s.max() for s in shards if len(s))
+    # integrate each replica's efficiency over [0, t_end]
+    grid = np.linspace(0, t_end, 512)
+    total_eff = 0.0
+    for s in shards:
+        active = (s[None, :] > grid[:, None]).sum(1)
+        eff = np.minimum(1.0, active / sat_batch)
+        total_eff += np.trapezoid(eff, grid)
+    # useful work fraction: integral of efficiency over reserved GPU-time
+    return float(total_eff / (dp_size * t_end))
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    base = None
+    for dp in (4, 8, 16, 32, 64, 128):
+        mfu = rollout_mfu(dp)
+        base = base or mfu
+        rows.append((f"fig2/rollout_mfu_dp{dp}", mfu,
+                     f"rel_to_dp4={mfu/base:.3f}"))
+    # the paper's qualitative claim: MFU monotonically decays with DP
+    vals = [r[1] for r in rows]
+    assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:])), \
+        "MFU should fall as DP grows"
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

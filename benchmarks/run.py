@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    import benchmarks.fig2_dp_mfu as fig2
+    import benchmarks.fig7_cost as fig7
+    import benchmarks.fig7c_auc as fig7c
+    import benchmarks.fig8_policies as fig8
+    import benchmarks.table2_bubble as table2
+    import benchmarks.hrrs_bench as hrrsb
+    import benchmarks.roofline as roofline
+
+    modules = [
+        ("fig2_dp_mfu", fig2),
+        ("fig7_cost", fig7),
+        ("fig7c_auc", fig7c),
+        ("fig8_policies", fig8),
+        ("table2_bubble", table2),
+        ("hrrs_bench", hrrsb),
+        ("roofline", roofline),
+    ]
+    print("name,value,derived")
+    failed = []
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            failed.append((name, repr(e)))
+            print(f"{name}/ERROR,nan,{e!r}")
+            continue
+        for row_name, value, derived in rows:
+            print(f"{row_name},{value},{derived}")
+        print(f"{name}/elapsed_s,{time.time() - t0:.2f},")
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

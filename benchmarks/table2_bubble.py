@@ -1,0 +1,55 @@
+"""Table 2 — bubble-ratio analysis across model sizes.
+
+Two parts:
+1. The paper's measured anatomy (reproduced from repro.core.traces) — the
+   70-81 % training-pool idle that motivates cluster-level reclamation.
+2. A live measurement on THIS machine: a tiny RLVR job runs through the
+   PlexRL stack and we derive the same anatomy from the WPG execution log
+   (generate vs update_actor wall time), demonstrating the measurement
+   pipeline end-to-end.
+"""
+from __future__ import annotations
+
+from repro.core.cluster import PlexCluster
+from repro.core.controller import JobConfig
+from repro.core.traces import PAPER_TABLE2, bubble_ratio
+
+TINY = (("num_layers", 2), ("d_model", 32), ("num_heads", 4),
+        ("num_kv_heads", 2), ("head_dim", 8), ("d_ff", 64),
+        ("vocab_size", 64), ("tie_embeddings", True))
+
+
+def measured_anatomy() -> dict:
+    cluster = PlexCluster(n_groups=1)
+    cluster.add_job(JobConfig(job_id="probe", model_name="qwen2-0.5b",
+                              steps=3, batch_size=4, group_size=2,
+                              max_new_tokens=8, seq_len=32, overrides=TINY))
+    cluster.run()
+    log = cluster.router.wpgs["probe-train"].exec_log
+    by_op: dict[str, float] = {}
+    for op, dt in log:
+        by_op[op] = by_op.get(op, 0.0) + dt
+    cycle = sum(by_op.values())
+    train_active = by_op.get("update_actor", 0.0)
+    return {"cycle": cycle, "update_actor": train_active,
+            "generate": by_op.get("generate", 0.0),
+            "bubble": 1.0 - train_active / max(cycle, 1e-9)}
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    paper = {"7B": 0.8010, "30B": 0.7067, "235B": 0.8111}
+    for size, e in PAPER_TABLE2.items():
+        br = bubble_ratio(e)
+        rows.append((f"table2/{size}/bubble_ratio", br,
+                     f"paper={paper[size]:.4f}"))
+        assert abs(br - paper[size]) < 0.005
+    m = measured_anatomy()
+    rows.append(("table2/local_probe/bubble_ratio", m["bubble"],
+                 f"cycle={m['cycle']:.2f}s update={m['update_actor']:.2f}s"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,70 @@
+"""Two RLVR jobs multiplexed on one shared pool — the paper's core claim,
+executed for real on this machine.
+
+Runs the same two jobs twice:
+  (a) isolated   — jobs run back-to-back on the pool (job-local reservation)
+  (b) multiplexed— PlexRL interleaves them with HRRS + StateManager swaps
+
+and compares wall-clock + billed GPU-seconds per step. Because each job's
+rollout phase leaves the "training pool" idle, multiplexing reclaims those
+bubbles (paper Fig. 7: up to 37.58 % GPU-hour reduction at scale).
+
+Run:  PYTHONPATH=src python examples/multiplex_rlvr.py
+"""
+import time
+
+import numpy as np
+
+from repro.core.cluster import PlexCluster
+from repro.core.controller import JobConfig
+
+TINY = (("num_layers", 2), ("d_model", 48), ("num_heads", 4),
+        ("num_kv_heads", 2), ("head_dim", 12), ("d_ff", 96),
+        ("vocab_size", 64), ("tie_embeddings", True), ("attn_q_chunk", 32))
+
+
+def make_jobs():
+    return [
+        JobConfig(job_id="alpha", model_name="qwen2-0.5b", steps=3,
+                  batch_size=8, group_size=4, max_new_tokens=6, seq_len=32,
+                  overrides=TINY, seed=1),
+        JobConfig(job_id="beta", model_name="qwen2-0.5b", steps=3,
+                  batch_size=8, group_size=4, max_new_tokens=6, seq_len=32,
+                  overrides=TINY, seed=2),
+    ]
+
+
+def run(interleave: bool):
+    cluster = PlexCluster(n_groups=1)
+    for cfg in make_jobs():
+        cluster.add_job(cfg)
+    t0 = time.time()
+    billing = cluster.run(interleave=interleave)
+    wall = time.time() - t0
+    return cluster, billing, wall
+
+
+def main():
+    print("=== isolated (back-to-back) ===")
+    c1, b1, w1 = run(interleave=False)
+    print(f"wall {w1:.1f}s; switches={len(c1.router.switch_log)}")
+
+    print("=== PlexRL multiplexed ===")
+    c2, b2, w2 = run(interleave=True)
+    print(f"wall {w2:.1f}s; switches={len(c2.router.switch_log)}")
+
+    for job in ("alpha", "beta"):
+        print(f"{job}: billed gpu_s/step isolated={b1[job].gpu_seconds_per_step():.2f} "
+              f"multiplexed={b2[job].gpu_seconds_per_step():.2f} "
+              f"(switch overhead {b2[job].switch_seconds:.3f}s)")
+        r = c2.controllers[job].reward_log
+        print(f"{job}: rewards {np.round(r, 3).tolist()}")
+    print("\nNOTE: on one CPU there is no idle-bubble to reclaim (every op is"
+          "\ncompute-bound), so the win here is the MECHANISM demonstration:"
+          "\nHRRS-batched context switches, measured setup costs, per-job"
+          "\nbilling. The capacity gain at cluster scale is quantified by"
+          "\nbenchmarks/fig8_policies.py (1.8x) and fig7_cost.py (31-38 %).")
+
+
+if __name__ == "__main__":
+    main()

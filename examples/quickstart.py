@@ -1,0 +1,49 @@
+"""Quickstart: the PlexRL public API in ~60 lines.
+
+1. Build a model from the registry and run a GRPO train step directly.
+2. Stand the same thing up as a serviceized deployment behind the Router
+   and drive it with queued operations (the paper's §4.2 interface).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec, get_config, reduced_config
+from repro.models.registry import build_model
+from repro.rl import grpo
+from repro.train import train_state as ts
+
+# ---------------------------------------------------------------- 1. direct
+cfg = reduced_config("qwen3-4b")          # same family, tiny dims (CPU demo)
+model = build_model(cfg)
+print(f"model {cfg.name}: {model.param_count():,} params (reduced)")
+
+state = ts.init(model, jax.random.PRNGKey(0))
+batch = model.dummy_batch(jax.random.PRNGKey(1), ShapeSpec("t", "train", 32, 8))
+step = jax.jit(grpo.make_update_actor(model))
+state, metrics = step(state, batch)
+print("one update_actor:", {k: round(float(v), 4) for k, v in metrics.items()})
+
+# ------------------------------------------------------------- 2. serviceized
+from repro.core import api
+from repro.core.router import Router
+
+router = Router()
+spec = api.DeploymentSpec(
+    deployment_id="demo-train", job_id="demo", model_name="qwen3-4b",
+    role="train",
+    overrides=tuple({"num_layers": 2, "d_model": 64, "num_heads": 4,
+                     "num_kv_heads": 2, "head_dim": 16, "d_ff": 128,
+                     "vocab_size": 128, "attn_q_chunk": 32}.items()))
+router.create_deployment(spec, group_id=0)
+
+fut_init = router.submit_queued_operation(api.make_op(spec, api.Op.INIT, 0))
+prompts = jax.random.randint(jax.random.PRNGKey(2), (4, 8), 3, 128)
+fut_gen = router.submit_queued_operation(
+    api.make_op(spec, api.Op.GENERATE, prompts, max_new_tokens=8,
+                prerequisites=(fut_init,) and ()))
+router.drain()                            # the scheduler admits + executes
+gen = fut_gen.result()
+print("generated:", gen["tokens"].shape, "logprobs:", gen["logprobs"].shape)
+print("state manager usage:", router.state_managers[0].usage())

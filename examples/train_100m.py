@@ -1,0 +1,35 @@
+"""End-to-end driver: train a ~100M-param qwen2-family model with GRPO on
+the synthetic verifiable-math task for a few hundred steps, through the full
+PlexRL service stack, with periodic checkpointing and restart-on-failure.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 200]
+(CPU: ~100M params is slow; --steps 20 for a quick pass. The driver is the
+same one a pod run would use: repro.launch.train.)
+"""
+import argparse
+
+from repro.launch import train as train_driver
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args(argv)
+    # ~100M params: 12 layers x d_model 640 x vocab 4096
+    train_driver.main([
+        "--arch", "qwen2-0.5b",
+        "--steps", str(args.steps),
+        "--layers", "12",
+        "--d-model", "640",
+        "--vocab", "4096",
+        "--batch-size", "16",
+        "--group-size", "4",
+        "--max-new-tokens", "24",
+        "--seq-len", "96",
+        "--ckpt-dir", "/tmp/plexrl_100m",
+        "--ckpt-every", "50",
+    ])
+
+
+if __name__ == "__main__":
+    main()

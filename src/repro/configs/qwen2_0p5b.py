@@ -1,0 +1,18 @@
+"""qwen2-0.5b — dense, GQA kv=2, QKV bias, tied embeddings. [arXiv:2407.10671; hf]"""
+from repro.configs import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151_936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    source="arXiv:2407.10671; hf",
+)

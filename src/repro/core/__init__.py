@@ -1,0 +1,7 @@
+"""PlexRL core: cluster-level multiplexing of serviceized LLM execution.
+
+The paper's contribution (§4-5): a Scheduler (spatio-temporal placement +
+HRRS runtime ordering), a remote execution service (Router + worker-process
+groups), and a per-node StateManager (3-tier residency, canonical offloaded
+state, materialisation / weight-sync / migration).
+"""

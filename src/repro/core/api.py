@@ -1,0 +1,102 @@
+"""Serviceized execution API (paper §4.2): the narrow remote interface.
+
+Algorithm code (RLController) sees only logical deployments and a small set
+of primitive operations; placement, parallelism, state movement, and
+ordering are the system's concern.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+class Op(enum.Enum):
+    INIT = "init"                       # deployment lifecycle
+    GENERATE = "generate"               # rollout (prefill + decode loop)
+    FORWARD = "forward"                 # compute_log_prob / reward model
+    FORWARD_BACKWARD = "forward_backward"
+    OPTIM_STEP = "optim_step"
+    UPDATE_ACTOR = "update_actor"       # fused fwd+bwd+step
+    SYNC_WEIGHTS = "sync_weights"
+    SAVE_CHECKPOINT = "save_checkpoint"
+    LOAD_CHECKPOINT = "load_checkpoint"
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentSpec:
+    """One logical deployment -> one worker-process group (WPG)."""
+    deployment_id: str
+    job_id: str
+    model_name: str                     # repro.configs registry id
+    role: str                           # "train" | "rollout" | "reference" | "critic"
+    nodes: int = 1
+    parallelism: Tuple[Tuple[str, int], ...] = ()   # e.g. (("data",2),("model",4))
+    overrides: Tuple[Tuple[str, Any], ...] = ()     # ModelConfig.replace kwargs
+
+
+class Future:
+    """Minimal future for the non-blocking control plane (§5.2.2)."""
+
+    __slots__ = ("_done", "_result", "_error", "callbacks")
+
+    def __init__(self):
+        self._done = False
+        self._result = None
+        self._error: Optional[BaseException] = None
+        self.callbacks = []
+
+    def set_result(self, value):
+        self._done = True
+        self._result = value
+        for cb in self.callbacks:
+            cb(self)
+
+    def set_error(self, err: BaseException):
+        self._done = True
+        self._error = err
+        for cb in self.callbacks:
+            cb(self)
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self):
+        if not self._done:
+            raise RuntimeError("future not resolved; drive the cluster loop")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+_req_counter = itertools.count(1)
+
+
+@dataclasses.dataclass
+class QueuedOperation:
+    """submit_queued_operation wrapper (§5.2.2): request + future handle."""
+    req_id: int
+    deployment_id: str
+    job_id: str
+    op: Op
+    args: tuple = ()
+    kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    exec_estimate: float = 1.0
+    arrival_time: float = 0.0
+    future: Future = dataclasses.field(default_factory=Future)
+    prerequisites: Tuple[int, ...] = ()
+
+
+def make_op(deployment: DeploymentSpec, op: Op, *args,
+            exec_estimate: float = 1.0, arrival_time: float = 0.0,
+            prerequisites: Tuple[int, ...] = (), **kwargs) -> QueuedOperation:
+    return QueuedOperation(
+        req_id=next(_req_counter),
+        deployment_id=deployment.deployment_id,
+        job_id=deployment.job_id,
+        op=op, args=args, kwargs=kwargs,
+        exec_estimate=exec_estimate,
+        arrival_time=arrival_time,
+        prerequisites=prerequisites,
+    )

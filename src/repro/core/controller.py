@@ -1,0 +1,130 @@
+"""RLController: the algorithm side of the decoupling (paper §4.1).
+
+Runs on CPU-only nodes, holds no model state, and expresses the RLVR loop
+purely through the remote service API: generate -> (verify) -> compute
+logprobs -> update actor -> sync weights. Swapping the algorithm (GRPO vs
+PPO, sync vs one-step-async) changes ONLY this file — deployment topology,
+scheduling and state movement stay in the system layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import api
+from repro.core.router import Router
+from repro.rl import data as data_lib
+from repro.rl import reward as reward_lib
+
+
+@dataclasses.dataclass
+class JobConfig:
+    job_id: str
+    model_name: str
+    batch_size: int = 8
+    group_size: int = 4
+    prompt_len: int = 12
+    max_new_tokens: int = 16
+    seq_len: int = 32
+    steps: int = 4
+    async_staleness: int = 0          # 0 = synchronous; 1 = one-step async
+    seed: int = 0
+    overrides: tuple = ()
+
+
+class RLControllerGRPO:
+    """One RLVR job written against the service API."""
+
+    def __init__(self, cfg: JobConfig, router: Router, group_id: int = 0):
+        self.cfg = cfg
+        self.router = router
+        self.dataset = data_lib.MathDataset(seed=cfg.seed)
+        self.batches = self.dataset.batches(cfg.batch_size, cfg.prompt_len,
+                                            cfg.group_size)
+        self.train_dep = api.DeploymentSpec(
+            deployment_id=f"{cfg.job_id}-train", job_id=cfg.job_id,
+            model_name=cfg.model_name, role="train",
+            overrides=cfg.overrides)
+        # rollout reuses the train deployment in this colpooled runtime;
+        # a split deployment would create a second spec with role="rollout".
+        router.create_deployment(self.train_dep, group_id=group_id)
+        self.metrics_log: List[dict] = []
+        self.reward_log: List[float] = []
+        self._step_idx = 0
+        self._update_reqs: Dict[int, int] = {}
+
+    # ------------------------------------------------------------ pieces
+    def submit_init(self) -> api.Future:
+        return self.router.submit_queued_operation(
+            api.make_op(self.train_dep, api.Op.INIT, self.cfg.seed,
+                        exec_estimate=1.0))
+
+    def _pack(self, prompts, answers, gen_result) -> Dict[str, np.ndarray]:
+        toks = np.asarray(gen_result["tokens"])
+        logps = np.asarray(gen_result["logprobs"])
+        texts = [data_lib.decode(t) for t in toks]
+        rewards = reward_lib.batch_rewards(texts, answers)
+        self.reward_log.append(float(rewards.mean()))
+        return data_lib.pack_rollout_batch(
+            prompts, toks, logps, rewards,
+            self.cfg.group_size, self.cfg.seq_len)
+
+    # ----------------------------------------------------------- the loop
+    def submit_step(self, gen_estimate: float = 1.0,
+                    train_estimate: float = 1.0) -> List[api.Future]:
+        """Issue one RLVR step's operation chain (non-blocking).
+
+        With ``async_staleness = s > 0`` the generation of step k is gated
+        only on the update of step k-1-s (one-step-async for s=1, §6.3:
+        "asynchronous rollout permits one step of staleness, with
+        synchronization enforced at the end of each iteration"); the
+        importance-sampling correction in GRPO absorbs the stale policy.
+        """
+        cfg = self.cfg
+        prompts, problems = next(self.batches)
+        answers = [p.answer for p in problems]
+
+        gate_idx = self._step_idx - 1 - cfg.async_staleness
+        prereqs = ()
+        if gate_idx >= 0 and gate_idx in self._update_reqs:
+            prereqs = (self._update_reqs[gate_idx],)
+        gen = api.make_op(self.train_dep, api.Op.GENERATE, prompts,
+                          exec_estimate=gen_estimate,
+                          max_new_tokens=cfg.max_new_tokens,
+                          prerequisites=prereqs)
+        gen_f = self.router.submit_queued_operation(gen)
+        step_idx = self._step_idx
+
+        def on_gen(fut: api.Future):
+            import jax.numpy as jnp
+            batch = self._pack(prompts, answers, fut.result())
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            upd = api.make_op(self.train_dep, api.Op.UPDATE_ACTOR, batch,
+                              exec_estimate=train_estimate,
+                              prerequisites=(gen.req_id,))
+            upd_f = self.router.submit_queued_operation(upd)
+            self._update_reqs[step_idx] = upd.req_id
+            upd_f.callbacks.append(
+                lambda f: self.metrics_log.append(f.result()))
+
+        gen_f.callbacks.append(on_gen)
+        self._step_idx += 1
+        return [gen_f]
+
+    def run(self, driver: Optional[Callable[[], None]] = None):
+        """Synchronous convenience loop (drives the router inline)."""
+        self.submit_init()
+        self.router.drain()
+        if self.cfg.async_staleness:
+            # pipeline: keep `staleness+1` steps in flight
+            for _ in range(self.cfg.steps):
+                self.submit_step()
+                self.router.step(max_ops=2)
+            self.router.drain()
+        else:
+            for _ in range(self.cfg.steps):
+                self.submit_step()
+                self.router.drain()
+        return {"rewards": self.reward_log, "metrics": self.metrics_log}

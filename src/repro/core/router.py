@@ -1,0 +1,129 @@
+"""Stateless Router: control-plane entry point of the execution service.
+
+§5.1: the Router maps logical deployment ids to WPGs, submits every incoming
+operation to the Scheduler for admission, and only then dispatches it. It
+owns deployment lifecycle (create / init / teardown) and the automatic
+context-switch logic (§5.2.2 ``_handle_job_transition``): when an admitted
+operation targets a different job than the one resident on the target group,
+offload+load operations are prepended transparently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core import api
+from repro.core.scheduler import hrrs
+from repro.core.scheduler.executor import State, Task, TaskExecutor
+from repro.core.state_manager import StateManager, Tier
+from repro.core.worker import WorkerProcessGroup
+
+
+class Router:
+    def __init__(self, now: Callable[[], float] = time.monotonic,
+                 policy: str = "hrrs"):
+        self.now = now
+        self.wpgs: Dict[str, WorkerProcessGroup] = {}
+        self.deployments: Dict[str, api.DeploymentSpec] = {}
+        self.group_of: Dict[str, int] = {}       # deployment -> node group
+        self.state_managers: Dict[int, StateManager] = {}
+        self.executor = TaskExecutor(now=now, policy=policy)
+        self.request_queues: Dict[str, List[api.QueuedOperation]] = {}
+        self.pending: Dict[int, api.QueuedOperation] = {}
+        self.switch_log: List[dict] = []
+
+    # ----------------------------------------------------------- lifecycle
+    def create_deployment(self, spec: api.DeploymentSpec, group_id: int = 0,
+                          state_manager: Optional[StateManager] = None
+                          ) -> WorkerProcessGroup:
+        sm = state_manager or self.state_managers.setdefault(
+            group_id, StateManager(node_id=f"group{group_id}"))
+        self.state_managers[group_id] = sm
+        wpg = WorkerProcessGroup(spec, sm)
+        self.wpgs[spec.deployment_id] = wpg
+        self.deployments[spec.deployment_id] = spec
+        self.group_of[spec.deployment_id] = group_id
+        self.request_queues.setdefault(spec.job_id, [])
+        return wpg
+
+    def teardown(self, deployment_id: str):
+        wpg = self.wpgs.pop(deployment_id, None)
+        if wpg is not None:
+            wpg.sm.unregister(wpg.sm.keys_for(wpg.job_prefix))
+        self.deployments.pop(deployment_id, None)
+        self.group_of.pop(deployment_id, None)
+
+    # -------------------------------------------------------------- submit
+    def submit_queued_operation(self, qop: api.QueuedOperation) -> api.Future:
+        """Non-blocking API handler (§5.2.2): wrap + enqueue, return at once."""
+        qop.arrival_time = self.now()
+        self.request_queues[qop.job_id].append(qop)
+        req = hrrs.Request(req_id=qop.req_id, job_id=qop.job_id,
+                           op=qop.op.value, exec_time=qop.exec_estimate,
+                           arrival_time=qop.arrival_time, payload=qop)
+        group = self.group_of[qop.deployment_id]
+        self.executor.submit(req, group, prerequisites=qop.prerequisites)
+        self.pending[qop.req_id] = qop
+        return qop.future
+
+    # ------------------------------------------------------------ dispatch
+    def _handle_job_transition(self, group_id: int, qop: api.QueuedOperation):
+        """Automatic context switching: if the group's resident job differs,
+        prepend offload(current) + load(target)."""
+        sm = self.state_managers[group_id]
+        target_wpg = self.wpgs[qop.deployment_id]
+        resident = [d for d, g in self.group_of.items()
+                    if g == group_id and d != qop.deployment_id
+                    and self.wpgs[d].resident()
+                    and self.wpgs[d].spec.job_id != qop.job_id]
+        t_off = 0.0
+        for dep in resident:
+            t_off += self.wpgs[dep].offload(Tier.HOST)
+        t_load = target_wpg.ensure_resident()
+        if resident or t_load > 0:
+            self.switch_log.append({
+                "t": self.now(), "group": group_id, "to_job": qop.job_id,
+                "t_offload": t_off, "t_load": t_load})
+        # feed measured setup costs back into HRRS
+        nbytes = sm.job_bytes(target_wpg.job_prefix)
+        self.executor.t_load = sm.load_time_estimate(nbytes)
+        self.executor.t_offload = sm.offload_time_estimate(nbytes)
+
+    def step(self, max_ops: int = 1) -> int:
+        """Drive the control loop: admit + execute up to max_ops operations
+        (serially — the single-process analogue of concurrent WPGs)."""
+        executed = 0
+        for _ in range(max_ops):
+            progressed = False
+            for group_id in sorted(set(self.group_of.values())):
+                task = self.executor.pick_next(group_id)
+                if task is None or not self.executor.try_start(task):
+                    continue
+                qop = self.pending[task.request.req_id]
+                if qop.op not in (api.Op.INIT,):
+                    self._handle_job_transition(group_id, qop)
+                try:
+                    result = self.wpgs[qop.deployment_id].execute(qop)
+                    self.executor.finish(task, result=result)
+                    qop.future.set_result(result)
+                except Exception as e:  # noqa: BLE001 - surface via future
+                    self.executor.finish(task, error=str(e))
+                    qop.future.set_error(e)
+                self.request_queues[qop.job_id] = [
+                    q for q in self.request_queues[qop.job_id]
+                    if q.req_id != qop.req_id]
+                executed += 1
+                progressed = True
+            if not progressed:
+                break
+        return executed
+
+    def drain(self, max_steps: int = 100_000) -> int:
+        total = 0
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0:
+                break
+            total += n
+        return total

@@ -1,0 +1,2 @@
+"""Cluster scheduler: cyclic horizon, hierarchical resource view, placement
+(Eq. 1-2), HRRS runtime ordering (Alg. 1), task-executor FSM."""

@@ -1,0 +1,139 @@
+"""Task Executor: the Scheduler's operational backbone (paper §5.2.3).
+
+A lightweight finite state machine per job/request with three mechanics:
+
+- Priority-based Admission (QUEUED): the pending pool is continuously
+  re-scored with HRRS against current resource availability.
+- Lock-Gated Execution (RUNNING): a request transitions to RUNNING only
+  after prerequisites finish and the exclusive node-group lock is acquired.
+- Lifecycle Teardown (COMPLETED): releases locks and unblocks successors.
+
+The executor is time-source agnostic: a callable ``now()`` lets it run under
+both the discrete-event simulator and wall-clock execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.scheduler import hrrs
+
+
+class State(enum.Enum):
+    QUEUED = "QUEUED"
+    RUNNING = "RUNNING"
+    COMPLETED = "COMPLETED"
+    FAILED = "FAILED"
+
+
+@dataclasses.dataclass
+class Task:
+    request: hrrs.Request
+    group_id: int
+    state: State = State.QUEUED
+    prerequisites: tuple = ()          # req_ids that must COMPLETE first
+    t_admitted: float = 0.0
+    t_started: float = 0.0
+    t_finished: float = 0.0
+    result: object = None
+    error: Optional[str] = None
+
+
+class GroupLock:
+    """Exclusive lock per training-services node group (model-swap safety)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.holder: Optional[int] = None
+
+    def acquire(self, req_id: int) -> bool:
+        ok = self._lock.acquire(blocking=False)
+        if ok:
+            self.holder = req_id
+        return ok
+
+    def release(self, req_id: int):
+        if self.holder == req_id:
+            self.holder = None
+            self._lock.release()
+
+
+class TaskExecutor:
+    def __init__(self, now: Callable[[], float],
+                 t_load: float = 0.0, t_offload: float = 0.0,
+                 policy: str = "hrrs"):
+        self.now = now
+        self.t_load = t_load
+        self.t_offload = t_offload
+        self.policy = policy
+        self.tasks: Dict[int, Task] = {}
+        self.locks: Dict[int, GroupLock] = {}
+        self.resident_job: Dict[int, Optional[str]] = {}
+        self.switch_count = 0
+
+    # ------------------------------------------------------------- submit
+    def submit(self, request: hrrs.Request, group_id: int,
+               prerequisites: Sequence[int] = ()) -> Task:
+        t = Task(request=request, group_id=group_id,
+                 prerequisites=tuple(prerequisites), t_admitted=self.now())
+        self.tasks[request.req_id] = t
+        self.locks.setdefault(group_id, GroupLock())
+        self.resident_job.setdefault(group_id, None)
+        return t
+
+    # ---------------------------------------------------------- admission
+    def _ready(self, t: Task) -> bool:
+        return t.state == State.QUEUED and all(
+            self.tasks[p].state == State.COMPLETED
+            for p in t.prerequisites if p in self.tasks)
+
+    def runnable(self, group_id: int) -> List[Task]:
+        return [t for t in self.tasks.values()
+                if t.group_id == group_id and self._ready(t)]
+
+    def pick_next(self, group_id: int) -> Optional[Task]:
+        """HRRS-scored admission for one group. Does not start the task."""
+        cands = self.runnable(group_id)
+        if not cands:
+            return None
+        sched = hrrs.schedule if self.policy == "hrrs" else hrrs.fcfs_schedule
+        plan = sched(None, None, [t.request for t in cands], self.now(),
+                     self.resident_job[group_id], self.t_load, self.t_offload)
+        if not plan:
+            return None
+        first = plan[0].request
+        return self.tasks[first.req_id]
+
+    # -------------------------------------------------------------- start
+    def try_start(self, task: Task) -> bool:
+        """Lock-gated QUEUED -> RUNNING transition. Returns switch-occurred
+        via ``task.request.payload``-agnostic bookkeeping."""
+        if not self._ready(task):
+            return False
+        lock = self.locks[task.group_id]
+        if not lock.acquire(task.request.req_id):
+            return False
+        if self.resident_job[task.group_id] not in (None, task.request.job_id):
+            self.switch_count += 1
+        self.resident_job[task.group_id] = task.request.job_id
+        task.state = State.RUNNING
+        task.t_started = self.now()
+        task.request.running = True
+        task.request.remaining_time = task.request.exec_time
+        return True
+
+    # ------------------------------------------------------------- finish
+    def finish(self, task: Task, result=None, error: Optional[str] = None):
+        task.state = State.FAILED if error else State.COMPLETED
+        task.error = error
+        task.result = result
+        task.t_finished = self.now()
+        task.request.running = False
+        self.locks[task.group_id].release(task.request.req_id)
+
+    # ------------------------------------------------------------ queries
+    def wait_time(self, task: Task) -> float:
+        start = task.t_started if task.t_started else self.now()
+        return max(0.0, start - task.t_admitted)

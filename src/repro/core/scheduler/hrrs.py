@@ -1,0 +1,135 @@
+"""HRRS — Highest Response Ratio with Setup (paper §4.4, Algorithm 1).
+
+Extends HRRN with the context-switch setup cost in the denominator:
+
+    P_i(t) = (W_i(t) + S_i(t)) / S_i(t) = 1 + W_i / (E_i + 1_switch * C_setup)
+
+which batches same-deployment requests to amortise offload/load cycles while
+ageing prevents starvation. ``schedule`` is the faithful Algorithm 1:
+score all requests (running + queued + new), sort by score, then replay them
+onto a cursor timeline, prepending offload+load whenever the job changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    job_id: str
+    op: str                      # generate / forward / forward_backward / ...
+    exec_time: float             # E_i estimate (profiled)
+    arrival_time: float
+    remaining_time: float = 0.0  # for the running request
+    running: bool = False
+    payload: object = None       # opaque: closure / simulated work descriptor
+    score: float = 0.0
+
+
+@dataclasses.dataclass
+class Assignment:
+    request: Request
+    t_start: float
+    t_end: float
+    switched: bool
+
+
+def hrrs_score(wait: float, exec_time: float, switch: bool,
+               setup_cost: float) -> float:
+    s = exec_time + (setup_cost if switch else 0.0)
+    s = max(s, 1e-9)
+    return (wait + s) / s
+
+
+def schedule(new_request: Optional[Request],
+             running: Optional[Request],
+             queued: Sequence[Request],
+             now: float,
+             current_job: Optional[str],
+             t_load: float,
+             t_offload: float) -> List[Assignment]:
+    """Algorithm 1. Returns the re-planned timeline (V')."""
+    omega: List[Request] = []
+    if new_request is not None:
+        omega.append(new_request)
+    if running is not None:
+        omega.append(running)
+    omega.extend(queued)
+
+    setup = t_load + t_offload
+    for r in omega:
+        wait = max(0.0, now - r.arrival_time)
+        if r.running:
+            t_req = r.remaining_time
+            switch = False
+        else:
+            switch = r.job_id != current_job
+            t_req = r.exec_time + (setup if switch else 0.0)
+        r.score = (wait + max(t_req, 1e-9)) / max(t_req, 1e-9)
+
+    omega.sort(key=lambda r: (-r.score, r.arrival_time, r.req_id))
+
+    plan: List[Assignment] = []
+    cursor = now
+    resident = current_job
+    first = True
+    for r in omega:
+        switched = False
+        if r.running:
+            dur = r.remaining_time
+        else:
+            if first and running is not None and r is not running:
+                # preempting the running request costs its offload too
+                switched = True
+            elif r.job_id != resident:
+                switched = True
+            dur = r.exec_time
+        if switched:
+            cursor += setup
+        t_start = cursor
+        t_end = t_start + dur
+        plan.append(Assignment(r, t_start, t_end, switched))
+        cursor = t_end
+        resident = r.job_id
+        first = False
+    return plan
+
+
+def fcfs_schedule(new_request: Optional[Request],
+                  running: Optional[Request],
+                  queued: Sequence[Request],
+                  now: float,
+                  current_job: Optional[str],
+                  t_load: float,
+                  t_offload: float) -> List[Assignment]:
+    """First-come-first-served baseline (paper §4.4's strawman)."""
+    omega: List[Request] = []
+    if running is not None:
+        omega.append(running)
+    omega.extend(queued)
+    if new_request is not None:
+        omega.append(new_request)
+    omega.sort(key=lambda r: (not r.running, r.arrival_time, r.req_id))
+    plan: List[Assignment] = []
+    cursor = now
+    resident = current_job
+    setup = t_load + t_offload
+    for r in omega:
+        switched = (not r.running) and r.job_id != resident
+        if switched:
+            cursor += setup
+        dur = r.remaining_time if r.running else r.exec_time
+        plan.append(Assignment(r, cursor, cursor + dur, switched))
+        cursor += dur
+        resident = r.job_id
+    return plan
+
+
+def total_switches(plan: Sequence[Assignment]) -> int:
+    return sum(1 for a in plan if a.switched)
+
+
+def makespan(plan: Sequence[Assignment]) -> float:
+    return plan[-1].t_end if plan else 0.0

@@ -1,0 +1,206 @@
+"""Job placement: spatio-temporal trace fitting (paper §4.3.2, Eq. 1-2).
+
+A job's profiled cycle is a list of execution segments S = {(a_i, d_i)} with
+period T and a node demand. Placement searches node groups and a Micro-Shift
+delta in [0, alpha*T] minimising the Scheduling Cost
+
+    J(delta) = w1 * (t_end(delta) - T)/T  +  w2 * delta/T        (Eq. 1)
+
+subject to every shifted segment fitting a free window (Eq. 2). Candidate
+deltas are the alignments of segment starts with free-window starts (the
+classic critical-shift set), evaluated with IntervalSet bisects. Ties are
+broken by predicted phase interference against resident jobs.
+
+Cold start (no trace): a dedicated group is provisioned for clean profiling.
+Warm start: trace fitting as above. A repacking event re-fits all profiled
+jobs to raise packing density.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.scheduler.intervals import IntervalSet
+
+Segment = Tuple[float, float]          # (relative offset a_i, duration d_i)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobTrace:
+    """Profiled periodic demand: segments are the *active* (GPU-busy)
+    execution windows within one period of length T."""
+    period: float
+    segments: Tuple[Segment, ...]
+    nodes: int = 1
+
+    def duty(self) -> float:
+        return sum(d for _, d in self.segments) / self.period
+
+    def end(self, shift: float = 0.0) -> float:
+        return max((a + shift + d) for a, d in self.segments) if self.segments else 0.0
+
+
+@dataclasses.dataclass
+class NodeGroup:
+    group_id: int
+    nodes: int
+    free: IntervalSet                   # free windows over the planning horizon
+    resident: List["Placed"] = dataclasses.field(default_factory=list)
+
+    def occupancy(self, horizon: float) -> float:
+        return 1.0 - self.free.total_free(horizon) / max(horizon * 1.0, 1e-9)
+
+
+@dataclasses.dataclass
+class Placed:
+    job_id: str
+    trace: JobTrace
+    group_id: int
+    shift: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementConfig:
+    w1: float = 1.0                     # completion-delay weight
+    w2: float = 0.25                    # start-shift weight
+    alpha: float = 1.0                  # shift search range [0, alpha*T]
+    horizon: float = 28_800.0
+    max_candidates: int = 256
+
+
+def scheduling_cost(trace: JobTrace, shift: float,
+                    cfg: PlacementConfig) -> float:
+    """Eq. 1."""
+    t_end = trace.end(shift)
+    return (cfg.w1 * (t_end - trace.period) / trace.period
+            + cfg.w2 * shift / trace.period)
+
+
+def candidate_shifts(trace: JobTrace, free: IntervalSet,
+                     cfg: PlacementConfig) -> List[float]:
+    """delta = window_start - segment_offset alignments, clipped to range."""
+    cands = {0.0}
+    limit = cfg.alpha * trace.period
+    for (a, _), (ws, _) in itertools.product(trace.segments, free.intervals()):
+        d = ws - a
+        if 0.0 <= d <= limit:
+            cands.add(d)
+    out = sorted(cands)
+    if len(out) > cfg.max_candidates:
+        step = len(out) / cfg.max_candidates
+        out = [out[int(i * step)] for i in range(cfg.max_candidates)]
+    return out
+
+
+def best_shift(trace: JobTrace, free: IntervalSet,
+               cfg: PlacementConfig) -> Optional[Tuple[float, float]]:
+    """Min-cost feasible micro-shift for one group. (shift, cost) or None."""
+    best: Optional[Tuple[float, float]] = None
+    for delta in candidate_shifts(trace, free, cfg):
+        if not free.simulate_insert(trace.segments, delta):
+            continue
+        cost = scheduling_cost(trace, delta, cfg)
+        if best is None or cost < best[1]:
+            best = (delta, cost)
+    return best
+
+
+def phase_interference(trace: JobTrace, shift: float,
+                       group: NodeGroup) -> float:
+    """Predicted overlap of the shifted active segments with resident jobs'
+    active segments over one hyper-cycle (lower = better, §4.3.2)."""
+    total = 0.0
+    for placed in group.resident:
+        for a, d in trace.segments:
+            s0 = (a + shift) % placed.trace.period
+            for ra, rd in placed.trace.segments:
+                rs = (ra + placed.shift) % placed.trace.period
+                lo = max(s0, rs)
+                hi = min(s0 + d, rs + rd)
+                total += max(0.0, hi - lo)
+    return total
+
+
+class PlacementPolicy:
+    """Dual-phase (cold/warm) placement over a set of node groups."""
+
+    def __init__(self, groups: Sequence[NodeGroup],
+                 cfg: PlacementConfig = PlacementConfig()):
+        self.groups = list(groups)
+        self.cfg = cfg
+        self.placed: Dict[str, Placed] = {}
+
+    # ------------------------------------------------------------- place
+    def place_cold(self, job_id: str, nodes: int,
+                   expected_duration: float) -> Optional[Placed]:
+        """Cold start: dedicated group for clean profiling (no sharing)."""
+        for g in self.groups:
+            if g.nodes >= nodes and not g.resident and \
+                    g.free.covers(0.0, expected_duration):
+                g.free.allocate(0.0, expected_duration)
+                p = Placed(job_id, JobTrace(expected_duration,
+                                            ((0.0, expected_duration),),
+                                            nodes), g.group_id, 0.0)
+                g.resident.append(p)
+                self.placed[job_id] = p
+                return p
+        return None
+
+    def place_warm(self, job_id: str, trace: JobTrace,
+                   n_cycles: Optional[int] = None) -> Optional[Placed]:
+        """Warm start: micro-shift trace fitting over eligible groups."""
+        cfg = self.cfg
+        n_cycles = n_cycles or max(1, int(cfg.horizon // trace.period))
+        scored: List[Tuple[float, float, NodeGroup, float]] = []
+        for g in self.groups:
+            if g.nodes < trace.nodes:
+                continue
+            fit = best_shift(trace, g.free, cfg)
+            if fit is None:
+                continue
+            delta, cost = fit
+            interf = phase_interference(trace, delta, g)
+            scored.append((cost, interf, g, delta))
+        if not scored:
+            return None
+        scored.sort(key=lambda t: (round(t[0], 6), t[1], t[2].group_id))
+        cost, _, g, delta = scored[0]
+        for c in range(n_cycles):
+            base = c * trace.period
+            for a, d in trace.segments:
+                g.free.allocate(base + a + delta, base + a + delta + d)
+        p = Placed(job_id, trace, g.group_id, delta)
+        g.resident.append(p)
+        self.placed[job_id] = p
+        return p
+
+    # ------------------------------------------------------------ remove
+    def remove(self, job_id: str, n_cycles: Optional[int] = None):
+        p = self.placed.pop(job_id, None)
+        if p is None:
+            return
+        g = next(g for g in self.groups if g.group_id == p.group_id)
+        g.resident = [r for r in g.resident if r.job_id != job_id]
+        n_cycles = n_cycles or max(1, int(self.cfg.horizon // p.trace.period))
+        for c in range(n_cycles):
+            base = c * p.trace.period
+            for a, d in p.trace.segments:
+                g.free.free(base + a + p.shift, base + a + p.shift + d)
+
+    # ----------------------------------------------------------- repack
+    def repack(self) -> int:
+        """Repacking event (§4.3.2): re-fit all placed jobs by descending
+        duty ratio. Returns the number of jobs that moved."""
+        jobs = sorted(self.placed.items(),
+                      key=lambda kv: -kv[1].trace.duty())
+        for job_id, _ in jobs:
+            self.remove(job_id)
+        moved = 0
+        for job_id, old in jobs:
+            p = self.place_warm(job_id, old.trace)
+            if p is None:  # should not happen: it fitted before
+                p = self.place_warm(job_id, old.trace, n_cycles=1)
+            if p and (p.group_id != old.group_id or p.shift != old.shift):
+                moved += 1
+        return moved

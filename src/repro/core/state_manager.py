@@ -1,0 +1,320 @@
+"""Model State Manager: per-node authority over tensor residency (paper §4.5).
+
+Three-tier hierarchy adapted to this runtime:
+
+    DEVICE  — accelerator memory (jax arrays, possibly sharded)
+    HOST    — canonicalised numpy buffers ("pinned host memory")
+    DISK    — .npz spill files ("NVMe", via repro.train.checkpoint shards)
+
+Key mechanisms reproduced:
+- §4.5.1 hierarchical residency with scheduler-directed prefetch/offload and
+  capacity-aware eviction (device -> host -> disk).
+- §4.5.2 canonicalised offloaded state: tensors are indexed by logical key
+  (repro.models.common.canonical_flat), deduplicating data-parallel replicas
+  and decoupling storage from process layout.
+- §4.5.3 materialisation (checkpoints from managed state), weight sync with
+  on-the-fly zero-redundancy resharding (each target fetches only the slices
+  its layout needs), cross-node migration.
+- §4.5.4 off-critical-path work: a host-resident AdamW step (the CPU
+  optimizer of ZeRO-offload) over canonical host state.
+
+All transfer timings are recorded; HRRS pulls its C_setup estimates from
+``load_time_estimate`` / ``offload_time_estimate``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+
+
+class Tier(enum.IntEnum):
+    DEVICE = 0
+    HOST = 1
+    DISK = 2
+
+
+@dataclasses.dataclass
+class Entry:
+    key: str                         # canonical logical key (job-scoped)
+    tier: Tier
+    nbytes: int
+    ref: Any = None                  # jax array (DEVICE) / np array (HOST)
+    path: Optional[str] = None       # DISK shard path
+    version: int = 0
+    refcount: int = 1                # dedup count across logical replicas
+    last_touch: float = 0.0
+    is_bf16: bool = False            # DISK tier stores bf16 as uint16 views
+
+
+def _nbytes(x) -> int:
+    return int(np.prod(x.shape)) * x.dtype.itemsize
+
+
+class StateManager:
+    """One instance per node. Owns every byte of managed model state."""
+
+    def __init__(self, node_id: str = "node0",
+                 device_capacity: float = float("inf"),
+                 host_capacity: float = float("inf"),
+                 disk_dir: Optional[str] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.node_id = node_id
+        self.device_capacity = device_capacity
+        self.host_capacity = host_capacity
+        self.disk_dir = disk_dir or os.path.join("/tmp", f"plexrl_{node_id}")
+        self.clock = clock
+        self.entries: Dict[str, Entry] = {}
+        self.transfer_log: List[Tuple[str, str, int, float]] = []
+        self._bw_estimate: Dict[str, float] = {}   # bytes/s per direction
+
+    # ------------------------------------------------------------ helpers
+    def _tier_bytes(self, tier: Tier) -> int:
+        return sum(e.nbytes for e in self.entries.values() if e.tier == tier)
+
+    def usage(self) -> Dict[str, int]:
+        return {t.name: self._tier_bytes(t) for t in Tier}
+
+    def _record(self, direction: str, nbytes: int, dt: float):
+        self.transfer_log.append((direction, "", nbytes, dt))
+        if dt > 0 and nbytes > 0:
+            bw = nbytes / dt
+            old = self._bw_estimate.get(direction)
+            self._bw_estimate[direction] = bw if old is None else 0.7 * old + 0.3 * bw
+
+    def _estimate(self, direction: str, nbytes: int, default_bw: float) -> float:
+        bw = self._bw_estimate.get(direction, default_bw)
+        return nbytes / max(bw, 1.0)
+
+    # ----------------------------------------------------------- register
+    def register(self, job_id: str, tree, tier: Tier = Tier.DEVICE,
+                 prefix: str = "params") -> List[str]:
+        """Adopt a pytree of tensors under canonical keys. Re-registering an
+        existing key with the same version only bumps the refcount (§4.5.2
+        dedup of data-parallel replicas)."""
+        flat = common.canonical_flat(tree, is_leaf=lambda x: hasattr(x, "shape"))
+        keys = []
+        for sub, leaf in flat.items():
+            key = f"{job_id}/{prefix}/{sub}"
+            if key in self.entries:
+                self.entries[key].refcount += 1
+            else:
+                self.entries[key] = Entry(
+                    key=key, tier=tier, nbytes=_nbytes(leaf),
+                    ref=leaf, last_touch=self.clock())
+            keys.append(key)
+        self._evict_if_needed()
+        return keys
+
+    def keys_for(self, job_id: str, prefix: Optional[str] = None) -> List[str]:
+        pre = f"{job_id}/" + (f"{prefix}/" if prefix else "")
+        return [k for k in self.entries if k.startswith(pre)]
+
+    def unregister(self, keys: Sequence[str]):
+        for k in keys:
+            e = self.entries.get(k)
+            if e is None:
+                continue
+            e.refcount -= 1
+            if e.refcount <= 0:
+                if e.path and os.path.exists(e.path):
+                    os.unlink(e.path)
+                del self.entries[k]
+
+    # ------------------------------------------------------ tier movement
+    def offload(self, keys: Sequence[str], to: Tier = Tier.HOST) -> float:
+        """Move state down the hierarchy. Returns elapsed seconds."""
+        t0 = time.monotonic()
+        moved = 0
+        for k in keys:
+            e = self.entries[k]
+            if e.tier >= to:
+                continue
+            if to == Tier.HOST:
+                arr = np.asarray(jax.device_get(e.ref))
+                e.ref = arr
+            else:  # DISK
+                if e.tier == Tier.DEVICE:
+                    e.ref = np.asarray(jax.device_get(e.ref))
+                os.makedirs(self.disk_dir, exist_ok=True)
+                path = os.path.join(self.disk_dir,
+                                    k.replace("/", "__") + ".npy")
+                arr = e.ref
+                e.is_bf16 = arr.dtype == jnp.bfloat16
+                np.save(path, arr.view(np.uint16) if e.is_bf16 else arr)
+                e.path = path
+                e.ref = None
+            e.tier = to
+            e.last_touch = self.clock()
+            moved += e.nbytes
+        dt = time.monotonic() - t0
+        self._record("offload", moved, dt)
+        return dt
+
+    def prefetch(self, keys: Sequence[str], shardings=None) -> float:
+        """Move state up to DEVICE (scheduler-directed prefetch)."""
+        t0 = time.monotonic()
+        moved = 0
+        for i, k in enumerate(keys):
+            e = self.entries[k]
+            if e.tier == Tier.DEVICE:
+                continue
+            if e.tier == Tier.DISK:
+                arr = np.load(e.path)
+                if e.is_bf16:
+                    arr = arr.view(jnp.bfloat16)
+                e.ref = arr
+            arr = e.ref
+            shd = None
+            if shardings is not None:
+                shd = shardings[i] if isinstance(shardings, (list, tuple)) \
+                    else shardings.get(k)
+            e.ref = jax.device_put(arr, shd) if shd is not None else jnp.asarray(arr)
+            e.tier = Tier.DEVICE
+            e.last_touch = self.clock()
+            moved += e.nbytes
+        dt = time.monotonic() - t0
+        self._record("load", moved, dt)
+        self._evict_if_needed()
+        return dt
+
+    def _evict_if_needed(self):
+        """Capacity-aware LRU eviction DEVICE->HOST->DISK."""
+        while self._tier_bytes(Tier.DEVICE) > self.device_capacity:
+            victims = [e for e in self.entries.values() if e.tier == Tier.DEVICE]
+            victim = min(victims, key=lambda e: e.last_touch)
+            self.offload([victim.key], Tier.HOST)
+        while self._tier_bytes(Tier.HOST) > self.host_capacity:
+            victims = [e for e in self.entries.values() if e.tier == Tier.HOST]
+            victim = min(victims, key=lambda e: e.last_touch)
+            self.offload([victim.key], Tier.DISK)
+
+    # --------------------------------------------------------- estimates
+    def load_time_estimate(self, nbytes: int) -> float:
+        return self._estimate("load", nbytes, 1e10)
+
+    def offload_time_estimate(self, nbytes: int) -> float:
+        return self._estimate("offload", nbytes, 1e10)
+
+    def job_bytes(self, job_id: str) -> int:
+        return sum(e.nbytes for k, e in self.entries.items()
+                   if k.startswith(f"{job_id}/"))
+
+    # ------------------------------------------------------- gather trees
+    def gather(self, job_id: str, template, prefix: str = "params"):
+        """Rebuild a pytree from managed entries (any tier; loads lazily from
+        disk, leaves host tensors as numpy)."""
+        flat = {}
+        pre = f"{job_id}/{prefix}/"
+        for k, e in self.entries.items():
+            if not k.startswith(pre):
+                continue
+            if e.tier == Tier.DISK:
+                arr = np.load(e.path)
+                if e.is_bf16:
+                    arr = arr.view(jnp.bfloat16)
+            else:
+                arr = e.ref
+            flat[k[len(pre):]] = arr
+        return common.canonical_unflatten(
+            template, flat, is_leaf=lambda x: hasattr(x, "shape"))
+
+    # ------------------------------------------------ §4.5.3 materialise
+    def materialize_checkpoint(self, job_id: str, template, path: str,
+                               step: int = 0, prefix: str = "params") -> str:
+        """Checkpoint = materialisation from managed state — works even if
+        (part of) the state is offloaded; no user-triggered export path."""
+        from repro.train import checkpoint as ckpt
+        tree = self.gather(job_id, template, prefix)
+        return ckpt.save(path, tree, step=step,
+                         extra_meta={"job_id": job_id, "node": self.node_id})
+
+    def sync_weights(self, job_id: str, template,
+                     target_shardings=None, prefix: str = "params",
+                     dtype=None):
+        """Weight synchronisation to a rollout deployment: materialise
+        training-visible state into the target layout. Zero-redundancy: with
+        NamedShardings, jax.device_put moves only the slices each target
+        shard needs."""
+        tree = self.gather(job_id, template, prefix)
+        if dtype is not None:
+            tree = jax.tree.map(lambda a: jnp.asarray(a, dtype), tree)
+        if target_shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, target_shardings)
+        else:
+            tree = jax.tree.map(jnp.asarray, tree)
+        return tree
+
+    def migrate(self, job_id: str, dst: "StateManager") -> int:
+        """Cross-node deployment migration: mirror managed state to the
+        destination node's manager (host tier) and drop it here."""
+        moved = 0
+        for k in list(self.keys_for(job_id)):
+            e = self.entries[k]
+            if e.tier == Tier.DEVICE:
+                arr = np.asarray(jax.device_get(e.ref))
+            elif e.tier == Tier.DISK:
+                arr = np.load(e.path)
+                if e.is_bf16:
+                    arr = arr.view(jnp.bfloat16)
+            else:
+                arr = e.ref
+            dst.entries[k] = Entry(key=k, tier=Tier.HOST, nbytes=e.nbytes,
+                                   ref=arr, version=e.version,
+                                   last_touch=dst.clock())
+            moved += e.nbytes
+            self.unregister([k])
+        return moved
+
+    # ------------------------------------------- §4.5.4 host optimizer
+    def host_optimizer_step(self, job_id: str, grads_tree, template,
+                            lr: float = 3e-5, b1: float = 0.9,
+                            b2: float = 0.95, eps: float = 1e-8,
+                            prefix: str = "params") -> int:
+        """CPU AdamW over host-resident canonical state (ZeRO-offload): runs
+        off the device critical path while other WPGs execute. Moments are
+        created lazily on HOST at first use. Returns the new step count."""
+        pre = f"{job_id}/{prefix}/"
+        gflat = common.canonical_flat(
+            grads_tree, is_leaf=lambda x: hasattr(x, "shape"))
+        step_key = f"{job_id}/opt/step"
+        if step_key not in self.entries:
+            self.entries[step_key] = Entry(step_key, Tier.HOST, 8,
+                                           ref=np.zeros((), np.int64))
+        step = int(self.entries[step_key].ref) + 1
+        self.entries[step_key].ref = np.asarray(step, np.int64)
+        c1 = 1.0 - b1 ** step
+        c2 = 1.0 - b2 ** step
+        for sub, g in gflat.items():
+            pkey = pre + sub
+            e = self.entries[pkey]
+            if e.tier == Tier.DEVICE:
+                # pull a host copy; device copy becomes stale until sync
+                e.ref = np.asarray(jax.device_get(e.ref))
+                e.tier = Tier.HOST
+            p = np.asarray(e.ref, np.float32)
+            g32 = np.asarray(jax.device_get(g), np.float32)
+            for mom, beta in (("mu", b1), ("nu", b2)):
+                mkey = f"{job_id}/opt/{mom}/{sub}"
+                if mkey not in self.entries:
+                    self.entries[mkey] = Entry(mkey, Tier.HOST,
+                                               g32.nbytes,
+                                               ref=np.zeros_like(g32))
+            mu = self.entries[f"{job_id}/opt/mu/{sub}"]
+            nu = self.entries[f"{job_id}/opt/nu/{sub}"]
+            mu.ref = b1 * mu.ref + (1 - b1) * g32
+            nu.ref = b2 * nu.ref + (1 - b2) * np.square(g32)
+            upd = (mu.ref / c1) / (np.sqrt(nu.ref / c2) + eps)
+            newp = (p - lr * upd)
+            e.ref = newp.astype(np.asarray(e.ref).dtype) \
+                if np.asarray(e.ref).dtype != np.float32 else newp
+            e.version += 1
+        return step

@@ -1,0 +1,189 @@
+"""Worker-process group (WPG): one logical deployment's execution backend.
+
+A WPG owns the jitted step functions for its model and executes admitted
+operations SERIALLY (the per-WPG ordering guarantee of §4.2/§5.1); different
+WPGs may run concurrently when the Scheduler admits them. Parameters and
+optimizer state live under the node's StateManager as canonical entries, so
+context switching (offload/load) and weight sync never touch worker code.
+
+On this CPU container a WPG runs on the local device mesh; on a pod it would
+bind a mesh slice — the execution surface (jit + shardings) is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import api
+from repro.core.state_manager import StateManager, Tier
+from repro.models.registry import Model, build_model
+from repro.rl import grpo, rollout as rollout_lib
+from repro.train import optimizer as opt
+from repro.train.train_state import TrainState
+
+
+class WorkerProcessGroup:
+    def __init__(self, spec: api.DeploymentSpec, state_manager: StateManager,
+                 rng_seed: int = 0, grpo_cfg: Optional[grpo.GRPOConfig] = None,
+                 adamw_cfg: Optional[opt.AdamWConfig] = None):
+        self.spec = spec
+        self.sm = state_manager
+        cfg = get_config(spec.model_name)
+        if spec.overrides:
+            cfg = cfg.replace(**dict(spec.overrides))
+        self.cfg = cfg
+        self.model: Model = build_model(cfg)
+        self.grpo_cfg = grpo_cfg or grpo.GRPOConfig()
+        self.adamw_cfg = adamw_cfg or opt.AdamWConfig()
+        self._rng = jax.random.PRNGKey(rng_seed)
+        self._initialized = False
+        self._keys: Dict[str, list] = {}
+        self.exec_log: list = []
+        # jitted primitives (built lazily)
+        self._update_actor = None
+        self._logprob = None
+
+    # -------------------------------------------------------------- state
+    @property
+    def job_prefix(self) -> str:
+        return f"{self.spec.job_id}:{self.spec.deployment_id}"
+
+    def _params_template(self):
+        return self.model.abstract_params()
+
+    def params(self):
+        return self.sm.gather(self.job_prefix, self._params_template(),
+                              "params")
+
+    def opt_state(self) -> opt.AdamWState:
+        tmpl = opt.abstract_state(self._params_template(), self.adamw_cfg)
+        return self.sm.gather(self.job_prefix, tmpl, "opt")
+
+    def _store(self, params=None, opt_state=None):
+        if params is not None:
+            for k in self.sm.keys_for(self.job_prefix, "params"):
+                self.sm.unregister([k])
+            self._keys["params"] = self.sm.register(
+                self.job_prefix, params, Tier.DEVICE, "params")
+        if opt_state is not None:
+            for k in self.sm.keys_for(self.job_prefix, "opt"):
+                self.sm.unregister([k])
+            self._keys["opt"] = self.sm.register(
+                self.job_prefix, opt_state, Tier.DEVICE, "opt")
+
+    def resident(self) -> bool:
+        keys = self.sm.keys_for(self.job_prefix)
+        return bool(keys) and all(
+            self.sm.entries[k].tier == Tier.DEVICE for k in keys)
+
+    def ensure_resident(self) -> float:
+        """Load this WPG's state to device (the 'load' half of a context
+        switch). Returns elapsed seconds."""
+        keys = self.sm.keys_for(self.job_prefix)
+        return self.sm.prefetch(keys)
+
+    def offload(self, to: Tier = Tier.HOST) -> float:
+        return self.sm.offload(self.sm.keys_for(self.job_prefix), to)
+
+    # --------------------------------------------------------------- ops
+    def execute(self, qop: api.QueuedOperation):
+        """Serial execution of one admitted operation."""
+        t0 = time.monotonic()
+        handler = {
+            api.Op.INIT: self._op_init,
+            api.Op.GENERATE: self._op_generate,
+            api.Op.FORWARD: self._op_forward,
+            api.Op.FORWARD_BACKWARD: self._op_forward_backward,
+            api.Op.OPTIM_STEP: self._op_optim_step,
+            api.Op.UPDATE_ACTOR: self._op_update_actor,
+            api.Op.SYNC_WEIGHTS: self._op_sync_weights,
+            api.Op.SAVE_CHECKPOINT: self._op_save_checkpoint,
+            api.Op.LOAD_CHECKPOINT: self._op_load_checkpoint,
+        }[qop.op]
+        result = handler(*qop.args, **qop.kwargs)
+        self.exec_log.append((qop.op.value, time.monotonic() - t0))
+        return result
+
+    # ------------------------------------------------------ op handlers
+    def _op_init(self, seed: int = 0):
+        params = self.model.init_params(jax.random.PRNGKey(seed))
+        if self.spec.role == "train":
+            self._store(params=params,
+                        opt_state=opt.init(params, self.adamw_cfg))
+        else:
+            self._store(params=params)
+        self._initialized = True
+        return {"params": self.model.param_count()}
+
+    def _op_generate(self, prompt_tokens, max_new_tokens: int = 32,
+                     temperature: float = 1.0, extra_inputs=None):
+        params = self.params()
+        self._rng, k = jax.random.split(self._rng)
+        toks, logps, alive = rollout_lib.rollout(
+            self.model, params, jnp.asarray(prompt_tokens), k,
+            rollout_lib.RolloutConfig(max_new_tokens=max_new_tokens,
+                                      temperature=temperature),
+            extra_inputs=extra_inputs)
+        return {"tokens": toks, "logprobs": logps, "alive": alive}
+
+    def _op_forward(self, batch):
+        if self._logprob is None:
+            self._logprob = jax.jit(grpo.make_compute_log_prob(self.model))
+        return self._logprob(self.params(), batch)
+
+    def _op_forward_backward(self, batch):
+        params = self.params()
+        grads, metrics = grpo.compute_grads(params, self.model, batch,
+                                            self.grpo_cfg, None)
+        return {"grads": grads, "metrics": metrics}
+
+    def _op_optim_step(self, grads, host: bool = False):
+        if host:
+            # §4.5.4: CPU optimizer over host-resident canonical state
+            step = self.sm.host_optimizer_step(
+                self.job_prefix, grads, self._params_template(),
+                lr=self.adamw_cfg.lr, b1=self.adamw_cfg.b1,
+                b2=self.adamw_cfg.b2, eps=self.adamw_cfg.eps)
+            return {"step": step, "host": True}
+        params = self.params()
+        state = self.opt_state()
+        new_params, new_state, metrics = opt.update(grads, state, params,
+                                                    self.adamw_cfg)
+        self._store(params=new_params, opt_state=new_state)
+        return {"step": int(new_state.step), **{k: float(v) for k, v in
+                                                metrics.items()}}
+
+    def _op_update_actor(self, batch):
+        if self._update_actor is None:
+            self._update_actor = jax.jit(grpo.make_update_actor(
+                self.model, self.grpo_cfg, self.adamw_cfg))
+        params = self.params()
+        state = TrainState(params, self.opt_state(),
+                           jnp.asarray(0, jnp.int32))
+        new_state, metrics = self._update_actor(state, batch)
+        self._store(params=new_state.params, opt_state=new_state.opt_state)
+        return {k: float(v) for k, v in metrics.items()}
+
+    def _op_sync_weights(self, target_wpg: "WorkerProcessGroup",
+                         target_shardings=None):
+        """Materialise training-visible weights into the rollout deployment's
+        layout (zero-redundancy resharding via StateManager)."""
+        tree = self.sm.sync_weights(self.job_prefix, self._params_template(),
+                                    target_shardings)
+        target_wpg._store(params=tree)
+        return {"synced_bytes": self.sm.job_bytes(self.job_prefix)}
+
+    def _op_save_checkpoint(self, path: str, step: int = 0):
+        return self.sm.materialize_checkpoint(
+            self.job_prefix, self._params_template(), path, step)
+
+    def _op_load_checkpoint(self, path: str):
+        from repro.train import checkpoint as ckpt
+        tree, meta = ckpt.restore(path, self._params_template())
+        self._store(params=tree)
+        return meta

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None):
+    """Dense attention. q: (B,S,H,D); k,v: (B,T,H,D) (pre-repeated GQA)."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    scale = d ** -0.5 if scale is None else scale
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+    return out
+
+
+def ref_decode_attention(q, k_cache, v_cache, pos, *,
+                         scale: Optional[float] = None):
+    """q: (B,H,D); caches (B,T,K,D); attend to positions <= pos."""
+    b, h, d = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    k = jnp.repeat(k_cache, g, axis=2)
+    v = jnp.repeat(v_cache, g, axis=2)
+    scale = d ** -0.5 if scale is None else scale
+    scores = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.arange(t)[None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", probs.astype(v.dtype), v)
+
+
+def ref_ssd(x, dt, A, B, C, *, chunk: int = 256):
+    """Delegates to the model-level chunked oracle (itself validated against
+    the naive sequential recurrence in tests)."""
+    from repro.models.mamba2 import ssd_chunked
+    return ssd_chunked(x, dt, A, B, C, chunk)
+
+
+def ref_ssd_naive(x, dt, A, B, C):
+    """O(s) sequential recurrence — the ground-truth semantics."""
+    from repro.models.mamba2 import ssd_decode
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, state = ssd_decode(state, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        ys.append(y)
+    return jnp.stack(ys, 1), state

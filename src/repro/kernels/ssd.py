@@ -1,0 +1,112 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunk scan.
+
+Grid = (batch, heads, n_chunks); the chunks dim is sequential on TPU, so the
+inter-chunk SSM state (head_dim x d_state, f32) is carried in VMEM scratch
+across chunk iterations — intra-chunk quadratic work AND the recurrent state
+pass happen in ONE fused kernel, with nothing but x/dt/B/C/y touching HBM.
+
+Per (b, h, c) program:
+    dA     = dt * A                  (l,)
+    L      = exp(segsum(dA))         (l, l) lower-triangular decay
+    y_diag = ((C Bᵀ) ∘ L ∘ dt) x     intra-chunk
+    y_off  = exp(cumsum dA) * (C Sᵀ) contribution of the carried state
+    S      = S * exp(sum dA) + xᵀ (B ∘ dt ∘ decay)   state update
+
+The final state per (b, h) is emitted for prefill seeding. ngroups == 1
+(B/C shared across heads), matching the assigned mamba2/zamba2 configs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                s_ref, *, chunk: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0, :, 0, :]                       # (l, p)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)    # (l,)
+    a = a_ref[0]                                # scalar A (negative)
+    bmat = b_ref[0, :, 0, :].astype(jnp.float32)  # (l, n)
+    cmat = c_ref[0, :, 0, :].astype(jnp.float32)  # (l, n)
+
+    dA = dt * a                                 # (l,)
+    dA_cs = jnp.cumsum(dA)                      # (l,)
+    # segsum: T[i, j] = sum_{j<k<=i} dA_k, lower-triangular
+    seg = dA_cs[:, None] - dA_cs[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tril = ii >= jj
+    decay = jnp.where(tril, jnp.exp(seg), 0.0)  # (l, l)
+
+    scores = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (l, l)
+    scores = scores * decay * dt[None, :]
+    y = jax.lax.dot_general(
+        scores.astype(x.dtype), x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (l, p)
+
+    # off-diagonal: contribution of the incoming state S (p, n)
+    s_in = s_ref[...]                           # (p, n) f32
+    c_proj = jax.lax.dot_general(
+        cmat, s_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (l, p)
+    y = y + jnp.exp(dA_cs)[:, None] * c_proj
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update
+    chunk_decay = jnp.exp(dA_cs[-1])
+    w = jnp.exp(dA_cs[-1] - dA_cs) * dt         # (l,)
+    upd = jax.lax.dot_general(
+        x.astype(jnp.float32), bmat * w[:, None],
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (p, n)
+    s_ref[...] = s_in * chunk_decay + upd
+
+    @pl.when(ic == nc - 1)
+    def _emit():
+        state_out_ref[0, 0, :, :] = s_ref[...]
+
+
+def ssd_chunk_scan(x, dt, A, B, C, *, chunk: int = 256,
+                   interpret: bool = False):
+    """x: (b, s, h, p); dt: (b, s, h) post-softplus; A: (h,) negative;
+    B, C: (b, s, 1, n) (ngroups=1). Returns (y (b,s,h,p), state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, nc=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, 1, n), lambda ib, ih, ic: (ib, ic, 0, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda ib, ih, ic: (ib, ic, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), B, C)
+    return y, state

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state. Single pod: 256 chips (16x16, TPU v5e pod).
+Multi-pod: 2 pods = 512 chips with a leading ``pod`` axis for cross-pod
+data parallelism (DCN-connected in production; the dry-run proves the pod
+axis shards).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Mesh over whatever devices exist (tests / CPU examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+HW = {
+    "peak_flops_bf16": 197e12,     # per chip
+    "hbm_bw": 819e9,               # bytes/s per chip
+    "ici_bw": 50e9,                # bytes/s per link (~per chip per direction)
+    "hbm_bytes": 16e9,             # HBM capacity per chip
+}

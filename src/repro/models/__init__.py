@@ -1,0 +1,2 @@
+"""Model zoo substrate: pure-JAX model families with declarative param specs
+and logical-axis sharding annotations."""

@@ -1,0 +1,133 @@
+"""Common parameter-spec machinery shared by every model family.
+
+Parameters are declared as :class:`ParamSpec` pytrees (shape + logical axes +
+init), from which we derive:
+
+- ``abstract_params``  -> ShapeDtypeStruct pytree (dry-run, no allocation)
+- ``init_params``      -> materialised arrays (smoke tests / real training)
+- ``logical_axes``     -> logical-axis pytree consumed by repro.models.sharding
+- ``canonical_flat``   -> flat {key: leaf} view; these keys are the
+  StateManager's canonical tensor identifiers (DESIGN.md §4.5.2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[Optional[str], ...]
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Axes                 # logical axis name per dim (None = unsharded)
+    init: str = "normal"       # "normal" | "zeros" | "ones" | "embed" | "ssm_a" | "dt_bias"
+    dtype: Any = jnp.bfloat16
+    scale: float = 1.0         # fan-in style scale multiplier for "normal"
+
+
+def spec(shape, axes, init="normal", dtype=jnp.bfloat16, scale=1.0) -> ParamSpec:
+    assert len(shape) == len(axes), (shape, axes)
+    return ParamSpec(tuple(int(s) for s in shape), tuple(axes), init, dtype, scale)
+
+
+def stack_specs(tree, num: int):
+    """Prepend a scanned ``layers`` dimension to every spec in the tree."""
+    def _stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((num,) + s.shape, ("layers",) + s.axes, s.init, s.dtype, s.scale)
+    return jax.tree.map(_stack, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_params(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec
+    )
+
+
+def logical_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def _init_one(key, s: ParamSpec):
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    if s.init == "ssm_a":
+        # A_log init: log of uniform [1, 16) as in mamba2
+        u = jax.random.uniform(key, s.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(s.dtype)
+    if s.init == "dt_bias":
+        # inverse-softplus of dt uniform in [1e-3, 1e-1]
+        dt = jnp.exp(
+            jax.random.uniform(key, s.shape, jnp.float32)
+            * (math.log(1e-1) - math.log(1e-3))
+            + math.log(1e-3)
+        )
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(s.dtype)
+    # fan-in scaled normal; embeddings use unit scale
+    fan_in = s.shape[0] if s.init == "embed" else int(np.prod(s.shape[:-1])) or 1
+    std = s.scale / math.sqrt(fan_in) if s.init != "embed" else s.scale
+    return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(s.dtype)
+
+
+def init_params(rng, specs):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_one(k, s) for k, s in zip(keys, leaves)])
+
+
+# ---------------------------------------------------------------- canonical keys
+
+def canonical_flat(tree, is_leaf=None) -> dict[str, Any]:
+    """Flatten a params pytree into {canonical_key: leaf}.
+
+    Canonical keys are '/'-joined paths — the logical identifiers the
+    StateManager deduplicates offloaded state by (paper §4.5.2).
+    ParamSpec leaves are kept intact.
+    """
+    if is_leaf is None:
+        is_leaf = is_spec
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def canonical_unflatten(template_tree, flat: dict[str, Any], is_leaf=None):
+    """Inverse of canonical_flat, keyed by the template tree's structure."""
+    if is_leaf is None:
+        is_leaf = is_spec
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template_tree, is_leaf=is_leaf)
+    leaves = []
+    for path, _ in paths:
+        key = "/".join(_path_str(p) for p in path)
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]

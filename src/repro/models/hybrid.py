@@ -1,0 +1,181 @@
+"""zamba2-style hybrid: Mamba2 backbone with ONE shared attention block whose
+weights are re-applied every ``attn_period`` blocks (11 applications for the
+81-block zamba2-7b).
+
+Layout for L total blocks, period q:
+  n_attn   = L // q                      (shared-attn applications)
+  n_mamba  = L - n_attn                  (mamba2 blocks)
+  grouped  = n_attn groups of (q-1) mamba blocks, each followed by the shared
+             attn block; plus ``n_mamba - n_attn*(q-1)`` trailing mamba blocks.
+
+The shared block keeps a *separate KV cache per application* (weights are
+shared, activations are not). Sub-quadratic core -> runs the long_500k cell;
+the shared-attn KV cache seq dim is sharded over ``data`` by the long-context
+rules.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import mamba2 as mb
+from repro.models.common import spec, stack_specs
+from repro.models.layers import (
+    Ctx,
+    apply_norm,
+    attn_apply,
+    attn_param_specs,
+    embed_apply,
+    embed_param_specs,
+    mlp_apply,
+    mlp_param_specs,
+    norm_param_specs,
+    remat_policy,
+    unembed_apply,
+)
+
+
+def _layout(cfg: ModelConfig):
+    q = cfg.attn_period
+    n_attn = cfg.num_layers // q
+    n_mamba = cfg.num_layers - n_attn
+    per_group = q - 1
+    trailing = n_mamba - n_attn * per_group
+    return n_attn, per_group, trailing
+
+
+def shared_block_param_specs(cfg: ModelConfig):
+    return {
+        "ln1": norm_param_specs(cfg),
+        "attn": attn_param_specs(cfg),
+        "ln2": norm_param_specs(cfg),
+        "mlp": mlp_param_specs(cfg, cfg.d_ff),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    n_attn, per_group, trailing = _layout(cfg)
+    p = {
+        "embed": embed_param_specs(cfg),
+        "mamba_grouped": stack_specs(
+            stack_specs(mb.layer_param_specs(cfg), per_group), n_attn),
+        "shared_attn": shared_block_param_specs(cfg),
+        "ln_f": norm_param_specs(cfg),
+    }
+    if trailing:
+        p["mamba_tail"] = stack_specs(mb.layer_param_specs(cfg), trailing)
+    return p
+
+
+def _shared_attn_apply(p, cfg: ModelConfig, x, positions, ctx,
+                       cache=None, cache_pos=None):
+    h = apply_norm(p["ln1"], x, cfg)
+    a, kv = attn_apply(p["attn"], cfg, h, positions=positions, causal=True,
+                       window=0, ctx=ctx, cache=cache, cache_pos=cache_pos)
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg)
+    return x + mlp_apply(p["mlp"], cfg, h, ctx), kv
+
+
+def forward(params, cfg: ModelConfig, tokens, ctx: Optional[Ctx] = None,
+            return_cache: bool = False):
+    b, s = tokens.shape
+    x = embed_apply(params["embed"], cfg, tokens, ctx)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    policy = remat_policy(cfg)
+    shared = params["shared_attn"]
+
+    def mamba_body(x, p_layer):
+        x, st = mb.block_apply(p_layer, cfg, x, ctx, return_state=return_cache)
+        return x, (st["conv"], st["ssm"]) if return_cache else None
+
+    def group_body(x, p_group):
+        x, states = jax.lax.scan(mamba_body, x, p_group)
+        x, kv = _shared_attn_apply(shared, cfg, x, positions, ctx)
+        if return_cache:
+            return x, (kv["k"], kv["v"], states[0], states[1])
+        return x, None
+
+    fn = group_body if policy is None else jax.checkpoint(group_body, policy=policy)
+    x, ys = jax.lax.scan(fn, x, params["mamba_grouped"])
+    tail_states = None
+    if "mamba_tail" in params:
+        tail_fn = mamba_body if policy is None else jax.checkpoint(mamba_body,
+                                                                   policy=policy)
+        x, tail_states = jax.lax.scan(tail_fn, x, params["mamba_tail"])
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = unembed_apply(params["embed"], cfg, x, ctx)
+    if return_cache:
+        ks, vs, convs, ssms = ys
+        cache = {"attn_k": ks, "attn_v": vs, "conv_g": convs, "ssm_g": ssms,
+                 "pos": jnp.full((), s, jnp.int32)}
+        if tail_states is not None:
+            cache["conv_t"], cache["ssm_t"] = tail_states
+        return logits, jnp.zeros((), jnp.float32), cache
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    n_attn, per_group, trailing = _layout(cfg)
+    k, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    kv = spec((n_attn, batch, max_len, k, hd),
+              ("layers", "cache_batch", "cache_seq", "kv_heads", "cache_hd"),
+              "zeros")
+    c = {
+        "attn_k": kv,
+        "attn_v": kv,
+        "conv_g": spec((n_attn, per_group, batch, mb.conv_dim(cfg), cfg.ssm_conv - 1),
+                       ("layers", None, "cache_batch", "conv_dim", None), "zeros"),
+        "ssm_g": spec((n_attn, per_group, batch, cfg.ssm_nheads, cfg.ssm_head_dim,
+                       cfg.ssm_state),
+                      ("layers", None, "cache_batch", "ssm_heads", None, None),
+                      "zeros", dtype=jnp.float32),
+        "pos": spec((), (), "zeros", dtype=jnp.int32),
+    }
+    if trailing:
+        c["conv_t"] = spec((trailing, batch, mb.conv_dim(cfg), cfg.ssm_conv - 1),
+                           ("layers", "cache_batch", "conv_dim", None), "zeros")
+        c["ssm_t"] = spec((trailing, batch, cfg.ssm_nheads, cfg.ssm_head_dim,
+                           cfg.ssm_state),
+                          ("layers", "cache_batch", "ssm_heads", None, None),
+                          "zeros", dtype=jnp.float32)
+    return c
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens,
+                ctx: Optional[Ctx] = None):
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = embed_apply(params["embed"], cfg, tokens, ctx)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    shared = params["shared_attn"]
+
+    def mamba_body(x, xs):
+        p_layer, conv_c, ssm_c = xs
+        x, nc = mb.block_apply(p_layer, cfg, x, ctx,
+                               cache={"conv": conv_c, "ssm": ssm_c})
+        return x, (nc["conv"], nc["ssm"])
+
+    def group_body(x, xs):
+        p_group, conv_g, ssm_g, ck, cv = xs
+        x, (convs, ssms) = jax.lax.scan(mamba_body, x, (p_group, conv_g, ssm_g))
+        x, kv = _shared_attn_apply(shared, cfg, x, positions, ctx,
+                                   cache={"k": ck, "v": cv}, cache_pos=pos)
+        return x, (convs, ssms, kv["k"], kv["v"])
+
+    x, (convs, ssms, ks, vs) = jax.lax.scan(
+        group_body, x,
+        (params["mamba_grouped"], cache["conv_g"], cache["ssm_g"],
+         cache["attn_k"], cache["attn_v"]))
+    new_cache = {"conv_g": convs, "ssm_g": ssms, "attn_k": ks, "attn_v": vs,
+                 "pos": pos + 1}
+    if "mamba_tail" in params:
+        x, (convs_t, ssms_t) = jax.lax.scan(
+            mamba_body, x, (params["mamba_tail"], cache["conv_t"], cache["ssm_t"]))
+        new_cache["conv_t"], new_cache["ssm_t"] = convs_t, ssms_t
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = unembed_apply(params["embed"], cfg, x, ctx)
+    return logits, new_cache

@@ -1,0 +1,161 @@
+"""Unified model API over all families + dry-run input specs.
+
+``build_model(cfg)`` returns a :class:`Model` facade with a uniform
+signature regardless of family:
+
+    model.forward(params, batch, ctx, return_cache=False)
+    model.decode_step(params, cache, batch, ctx)
+    model.param_specs() / abstract_params() / init_params(rng)
+    model.cache_specs(batch, max_len)
+    model.input_specs(shape)        # ShapeDtypeStructs + logical axes
+
+``batch`` is a dict: always ``tokens``; ``frames`` for audio, ``vision`` for
+vlm. RLVR train batches additionally carry ``behavior_logprobs``,
+``advantages``, ``loss_mask`` (consumed by repro.rl, not the model).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig, ShapeSpec
+from repro.models import common, hybrid, mamba2, transformer, vision, whisper
+from repro.models.common import ParamSpec, is_spec
+from repro.models.layers import Ctx
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "audio": whisper,
+    "vlm": vision,
+}
+
+
+class InputSpec(NamedTuple):
+    sds: jax.ShapeDtypeStruct
+    axes: tuple
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.mod = _FAMILY_MODULES[cfg.family]
+
+    # ------------------------------------------------------------- params
+    def param_specs(self):
+        return self.mod.param_specs(self.cfg)
+
+    def abstract_params(self):
+        return common.abstract_params(self.param_specs())
+
+    def logical_axes(self):
+        return common.logical_axes(self.param_specs())
+
+    def init_params(self, rng):
+        return common.init_params(rng, self.param_specs())
+
+    def param_count(self) -> int:
+        return common.param_count(self.param_specs())
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top-k experts active)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if not cfg.num_experts:
+            return total
+        expert = 0
+        flat = common.canonical_flat(self.param_specs())
+        for key, s in flat.items():
+            if "/moe/" in f"/{key}/" and any(
+                w in key for w in ("wi_gate", "wi_up", "wo")
+            ):
+                expert += int(np.prod(s.shape))
+        return total - expert + expert * cfg.experts_per_token // cfg.num_experts
+
+    # ------------------------------------------------------------ compute
+    def _extras(self, params, batch):
+        if self.cfg.family == "audio":
+            return (batch["frames"],)
+        if self.cfg.family == "vlm":
+            return (batch["vision"],)
+        return ()
+
+    def forward(self, params, batch: Dict[str, Any], ctx: Optional[Ctx] = None,
+                return_cache: bool = False):
+        return self.mod.forward(params, self.cfg, batch["tokens"],
+                                *self._extras(params, batch), ctx=ctx,
+                                return_cache=return_cache)
+
+    def decode_step(self, params, cache, batch: Dict[str, Any],
+                    ctx: Optional[Ctx] = None):
+        return self.mod.decode_step(params, self.cfg, cache, batch["tokens"],
+                                    ctx=ctx)
+
+    def cache_specs(self, batch: int, max_len: int):
+        return self.mod.cache_specs(self.cfg, batch, max_len)
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return common.abstract_params(self.cache_specs(batch, max_len))
+
+    def init_cache(self, rng, batch: int, max_len: int):
+        return common.init_params(rng, self.cache_specs(batch, max_len))
+
+    # ------------------------------------------------------------- inputs
+    def input_specs(self, shape: ShapeSpec, rl_train: bool = True
+                    ) -> Dict[str, InputSpec]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        b = shape.global_batch
+        s = shape.seq_len
+        dt = common.dtype_of(cfg.dtype)
+        out: Dict[str, InputSpec] = {}
+        if shape.kind in ("train", "prefill"):
+            out["tokens"] = InputSpec(
+                jax.ShapeDtypeStruct((b, s), jnp.int32), ("batch", "seq"))
+        else:  # decode: one new token against a cache of length seq_len
+            out["tokens"] = InputSpec(
+                jax.ShapeDtypeStruct((b, 1), jnp.int32), ("cache_batch", None))
+        if cfg.family == "audio" and shape.kind != "decode":
+            out["frames"] = InputSpec(
+                jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), dt),
+                ("batch", None, "embed"))
+        if cfg.family == "vlm" and shape.kind != "decode":
+            out["vision"] = InputSpec(
+                jax.ShapeDtypeStruct((b, cfg.vision_seq, cfg.d_model), dt),
+                ("batch", None, "embed"))
+        if shape.kind == "train" and rl_train:
+            out["behavior_logprobs"] = InputSpec(
+                jax.ShapeDtypeStruct((b, s), jnp.float32), ("batch", "seq"))
+            out["advantages"] = InputSpec(
+                jax.ShapeDtypeStruct((b,), jnp.float32), ("batch",))
+            out["loss_mask"] = InputSpec(
+                jax.ShapeDtypeStruct((b, s), jnp.float32), ("batch", "seq"))
+        return out
+
+    def dummy_batch(self, rng, shape: ShapeSpec, rl_train: bool = True):
+        """Materialised random batch matching input_specs (smoke tests)."""
+        specs = self.input_specs(shape, rl_train)
+        keys = jax.random.split(rng, len(specs))
+        batch = {}
+        for key, (name, ispec) in zip(keys, specs.items()):
+            sds = ispec.sds
+            if np.issubdtype(sds.dtype, np.integer):
+                batch[name] = jax.random.randint(
+                    key, sds.shape, 0, self.cfg.vocab_size, sds.dtype)
+            else:
+                batch[name] = jax.random.normal(key, sds.shape, jnp.float32
+                                                ).astype(sds.dtype) * 0.02
+        if "behavior_logprobs" in batch:
+            batch["behavior_logprobs"] = -jnp.abs(batch["behavior_logprobs"])
+        if "loss_mask" in batch:
+            batch["loss_mask"] = jnp.ones_like(batch["loss_mask"])
+        return batch
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,181 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style), with best-effort
+divisibility resolution.
+
+Two rule sets ship by default:
+
+- ``RULES_TP``      — paper-faithful ZeRO-2 analogue: tensor-parallel params
+  over the ``model`` axis, replicated over ``data``; optimizer moments are
+  additionally sharded over ``data`` (see repro.train.optimizer).
+- ``RULES_FSDP_TP`` — beyond-paper default for very large models: adds
+  FSDP-style sharding of the embed dim over ``data``.
+
+``resolve(axes, mesh, rules)`` maps a logical-axis tuple to a PartitionSpec,
+dropping any assignment whose dim is not divisible by the mesh axes and any
+mesh axis already used by an earlier dim (GSPMD requires distinct axes).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+Rules = Tuple[Tuple[str, MeshAxes], ...]
+
+RULES_TP: Rules = (
+    ("batch", ("pod", "data")),
+    ("cache_batch", ("pod", "data")),
+    # fallback: KV-cache head_dim takes the model axis only when kv_heads
+    # could not (GQA archs with kv_heads < mesh model size). head_dim is
+    # chosen over the seq dim because the decode cache write
+    # (dynamic-update-slice at `pos`) would force SPMD to rematerialise a
+    # seq-sharded buffer every step.
+    ("cache_hd", "model"),
+    ("cache_seq", None),
+    # prefill OUTPUT caches: seq-sharded over model (cheap slicing of the
+    # per-layer K/V stack; no decode-time DUS to worry about)
+    ("cache_seq_out", "model"),
+    # fallback: MoE expert-capacity / per-expert mlp dims take the model
+    # axis only when the expert count could not (granite: 40 experts on a
+    # 16-way axis)
+    ("expert_cap", None),
+    ("expert_mlp", None),
+    ("seq_res", None),              # residual-stream seq (SP rules: model)
+    ("vocab", "model"),
+    ("embed", None),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("qkv_merged", "model"),
+    ("mlp", "model"),
+    ("experts", "model"),
+    ("ssm_inner", "model"),
+    ("ssm_heads", "model"),
+    ("conv_dim", "model"),
+    ("layers", None),
+    ("seq", None),
+    ("state", None),
+    ("head_dim", None),
+    ("groups", None),
+)
+
+RULES_FSDP_TP: Rules = (("embed", "data"),) + tuple(
+    (k, v) for k, v in RULES_TP if k != "embed"
+)
+
+# Beyond-paper: Megatron-style sequence parallelism — the residual stream is
+# sharded over the model axis between blocks, turning the per-layer f32
+# activation all-reduces into bf16 reduce-scatter/all-gather pairs.
+RULES_FSDP_TP_SP: Rules = (("seq_res", "model"),) + tuple(
+    (k, v) for k, v in RULES_FSDP_TP if k != "seq_res"
+)
+
+# Context-parallel overrides for the long-context decode cells: the KV cache's
+# sequence dim is sharded over `data` (batch=1 cannot use it).
+RULES_LONG_CONTEXT: Rules = (
+    ("cache_seq", "data"),
+    ("cache_batch", "pod"),
+    ("batch", "pod"),
+) + tuple(
+    (k, v)
+    for k, v in RULES_TP
+    if k not in ("cache_seq", "cache_batch", "batch")
+)
+# In the long rules cache_seq is PRIMARY (batch=1 leaves `data` free and the
+# single-sequence cache must spread); it is not in FALLBACK_AXES there
+# because the hybrid archs running long_500k have divisible kv heads.
+
+
+def named_rules(name: str) -> Rules:
+    return {
+        "tp": RULES_TP,
+        "fsdp_tp": RULES_FSDP_TP,
+        "fsdp_tp_sp": RULES_FSDP_TP_SP,
+        "long": RULES_LONG_CONTEXT,
+    }[name]
+
+
+def _mesh_axes_tuple(v: MeshAxes) -> Tuple[str, ...]:
+    if v is None:
+        return ()
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+# Axes only assigned in a second pass, after the primary axes had their
+# chance — e.g. a decode cache's seq dim takes the model axis only when
+# kv_heads could not (GQA archs whose kv count doesn't divide the mesh).
+FALLBACK_AXES = {"cache_hd"}
+
+
+def resolve(axes: Sequence[Optional[str]], mesh: Mesh, rules: Rules,
+            shape: Optional[Sequence[int]] = None) -> P:
+    """Logical axes -> PartitionSpec, best-effort divisible, two-pass
+    (primary axes then fallback axes)."""
+    rule_map = dict(rules)
+    used: set[str] = set()
+    out: list = [None] * len(axes)
+
+    def try_assign(i, ax):
+        assigned: Tuple[str, ...] = ()
+        if ax is not None and ax in rule_map:
+            cand = tuple(
+                m for m in _mesh_axes_tuple(rule_map[ax])
+                if m in mesh.axis_names and m not in used
+            )
+            if cand:
+                total = int(np.prod([mesh.shape[m] for m in cand]))
+                if shape is None or (total and shape[i] % total == 0):
+                    assigned = cand
+        used.update(assigned)
+        if len(assigned) == 1:
+            out[i] = assigned[0]
+        elif assigned:
+            out[i] = assigned
+
+    for i, ax in enumerate(axes):
+        if ax not in FALLBACK_AXES:
+            try_assign(i, ax)
+    for i, ax in enumerate(axes):
+        if ax in FALLBACK_AXES:
+            try_assign(i, ax)
+    # trim trailing Nones for tidier specs
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_partition_specs(axes_tree, mesh: Mesh, rules: Rules, shapes_tree=None):
+    """Map a logical-axes pytree (tuples as leaves) to PartitionSpecs."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x
+    )
+    if shapes_tree is None:
+        return jax.tree.map(lambda a: resolve(a, mesh, rules), axes_tree, is_leaf=is_axes)
+    return jax.tree.map(
+        lambda a, s: resolve(a, mesh, rules, shape=s.shape),
+        axes_tree,
+        shapes_tree,
+        is_leaf=is_axes,
+    )
+
+
+def tree_shardings(axes_tree, mesh: Mesh, rules: Rules, shapes_tree=None):
+    specs = tree_partition_specs(axes_tree, mesh, rules, shapes_tree)
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def constrain(x, mesh: Mesh, rules: Rules, axes: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical axes (no-op outside a mesh ctx)."""
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, resolve(axes, mesh, rules, shape=x.shape))
+        )
+    except ValueError:
+        return x

@@ -1,0 +1,194 @@
+"""Dense / MoE decoder-only transformer LM (qwen2, qwen3, gemma2,
+deepseek-coder, arctic, granite families).
+
+Layers are scanned (``jax.lax.scan`` over stacked params) with per-group
+remat, so the compiled HLO stays one-group-sized regardless of depth. For
+local/global alternating attention (gemma2) the scan iterates over groups of
+``local_global_period`` layers so each sub-layer gets a *static* window —
+no doubled attention compute.
+
+Supports full-sequence forward (train / prefill-with-cache) and single-token
+decode against a KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import moe as moe_lib
+from repro.models.common import spec, stack_specs
+from repro.models.layers import (
+    Ctx,
+    apply_norm,
+    attn_apply,
+    attn_param_specs,
+    embed_apply,
+    embed_param_specs,
+    mlp_apply,
+    mlp_param_specs,
+    norm_param_specs,
+    remat_policy,
+    unembed_apply,
+)
+
+
+# ------------------------------------------------------------------ params
+
+def layer_param_specs(cfg: ModelConfig):
+    p = {
+        "ln1": norm_param_specs(cfg),
+        "attn": attn_param_specs(cfg),
+        "ln2": norm_param_specs(cfg),
+    }
+    if cfg.num_experts:
+        p["moe"] = moe_lib.moe_param_specs(cfg)
+        if cfg.dense_residual:
+            p["mlp"] = mlp_param_specs(cfg, cfg.d_ff)
+    else:
+        p["mlp"] = mlp_param_specs(cfg, cfg.d_ff)
+    if cfg.post_norms:
+        p["ln1_post"] = norm_param_specs(cfg)
+        p["ln2_post"] = norm_param_specs(cfg)
+    return p
+
+
+def param_specs(cfg: ModelConfig):
+    return {
+        "embed": embed_param_specs(cfg),
+        "layers": stack_specs(layer_param_specs(cfg), cfg.num_layers),
+        "ln_f": norm_param_specs(cfg),
+    }
+
+
+def _group_layout(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_groups, period): scan over groups of `period` static sub-layers."""
+    period = cfg.local_global_period or 1
+    assert cfg.num_layers % period == 0, (cfg.name, cfg.num_layers, period)
+    return cfg.num_layers // period, period
+
+
+def _sub_window(cfg: ModelConfig, j: int, period: int) -> int:
+    """Static sliding window for sub-layer j of a group (gemma2: local first,
+    global last)."""
+    if cfg.sliding_window and period > 1 and j < period - 1:
+        return cfg.sliding_window
+    if cfg.sliding_window and period == 1:
+        return cfg.sliding_window
+    return 0
+
+
+# ----------------------------------------------------------------- forward
+
+def _ffn(p, cfg: ModelConfig, x, ctx):
+    if cfg.num_experts:
+        out, aux = moe_lib.moe_apply(p["moe"], cfg, x, ctx)
+        if cfg.dense_residual:
+            out = out + mlp_apply(p["mlp"], cfg, x, ctx)
+        return out, aux
+    return mlp_apply(p["mlp"], cfg, x, ctx), jnp.zeros((), jnp.float32)
+
+
+def layer_apply(p, cfg: ModelConfig, x, *, positions, window: int, ctx,
+                cache=None, cache_pos=None):
+    """One decoder layer. Returns (x, aux, kv)."""
+    from repro.models.layers import constrain
+    # seq_res is a no-op under the baseline rules; under the
+    # sequence-parallel rules it shards the residual stream over the model
+    # axis between blocks (Megatron SP: all-reduce -> RS/AG pairs in bf16).
+    x = constrain(ctx, x, ("batch", "seq_res", "embed"))
+    h = apply_norm(p["ln1"], x, cfg)
+    a, kv = attn_apply(p["attn"], cfg, h, positions=positions, causal=True,
+                       window=window, ctx=ctx, cache=cache, cache_pos=cache_pos)
+    if cfg.post_norms:
+        a = apply_norm(p["ln1_post"], a, cfg)
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg)
+    m, aux = _ffn(p, cfg, h, ctx)
+    if cfg.post_norms:
+        m = apply_norm(p["ln2_post"], m, cfg)
+    return x + m, aux, kv
+
+
+def forward(params, cfg: ModelConfig, tokens, ctx: Optional[Ctx] = None,
+            return_cache: bool = False):
+    """Teacher-forcing forward. tokens: (B, S) -> (logits, aux[, cache])."""
+    b, s = tokens.shape
+    x = embed_apply(params["embed"], cfg, tokens, ctx)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    n_groups, period = _group_layout(cfg)
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_groups, period) + a.shape[1:]), params["layers"])
+
+    def group_body(x, p_group):
+        auxs, ks, vs = [], [], []
+        for j in range(period):
+            p_layer = jax.tree.map(lambda a: a[j], p_group)
+            x, aux, kv = layer_apply(
+                p_layer, cfg, x, positions=positions,
+                window=_sub_window(cfg, j, period), ctx=ctx)
+            auxs.append(aux)
+            ks.append(kv["k"])
+            vs.append(kv["v"])
+        aux = jnp.stack(auxs).mean()
+        if return_cache:
+            return x, (aux, jnp.stack(ks), jnp.stack(vs))
+        return x, aux
+
+    policy = remat_policy(cfg)
+    fn = group_body if policy is None else jax.checkpoint(group_body, policy=policy)
+    x, ys = jax.lax.scan(fn, x, grouped)
+
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = unembed_apply(params["embed"], cfg, x, ctx)
+    if return_cache:
+        aux, ks, vs = ys  # (n_groups, period, B, S, K, D)
+        flat = lambda a: a.reshape((cfg.num_layers,) + a.shape[2:])
+        cache = {"k": flat(ks), "v": flat(vs),
+                 "pos": jnp.full((), s, jnp.int32)}
+        return logits, aux.mean(), cache
+    return logits, ys.mean()
+
+
+# ------------------------------------------------------------------ decode
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    k, hd, l = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+    kv = spec((l, batch, max_len, k, hd),
+              ("layers", "cache_batch", "cache_seq", "kv_heads", "cache_hd"),
+              "zeros")
+    return {"k": kv, "v": kv, "pos": spec((), (), "zeros", dtype=jnp.int32)}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens,
+                ctx: Optional[Ctx] = None):
+    """One decode step. tokens: (B, 1). cache k/v: (L, B, T, K, D)."""
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = embed_apply(params["embed"], cfg, tokens, ctx)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    n_groups, period = _group_layout(cfg)
+    regroup = lambda a: a.reshape((n_groups, period) + a.shape[1:])
+    grouped = jax.tree.map(regroup, params["layers"])
+    ck, cv = regroup(cache["k"]), regroup(cache["v"])
+
+    def group_body(x, xs):
+        p_group, ck_g, cv_g = xs
+        ks, vs = [], []
+        for j in range(period):
+            p_layer = jax.tree.map(lambda a: a[j], p_group)
+            x, _, kv = layer_apply(
+                p_layer, cfg, x, positions=positions,
+                window=_sub_window(cfg, j, period), ctx=ctx,
+                cache={"k": ck_g[j], "v": cv_g[j]}, cache_pos=pos)
+            ks.append(kv["k"])
+            vs.append(kv["v"])
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    x, (ks, vs) = jax.lax.scan(group_body, x, (grouped, ck, cv))
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = unembed_apply(params["embed"], cfg, x, ctx)
+    flat = lambda a: a.reshape((cfg.num_layers,) + a.shape[2:])
+    return logits, {"k": flat(ks), "v": flat(vs), "pos": pos + 1}

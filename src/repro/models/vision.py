@@ -1,0 +1,168 @@
+"""llama-3.2-vision backbone: dense decoder with gated cross-attention image
+layers every ``cross_attn_period`` layers (20 cross layers for the 100L/90B).
+
+The vision tower is a STUB per the assignment: ``input_specs()`` provides
+patch embeddings already projected to d_model (B, vision_seq, d_model).
+Cross layers use tanh-gated residuals (zero-init gates) as in the reference
+model, so an image-free init leaves the text path untouched.
+
+Decode: self-attn KV cache + cross K/V precomputed once from the patch
+embeddings.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import transformer as tf
+from repro.models.common import spec, stack_specs
+from repro.models.layers import (
+    Ctx,
+    apply_norm,
+    attn_apply,
+    attn_param_specs,
+    attention_core,
+    embed_apply,
+    embed_param_specs,
+    mlp_apply,
+    mlp_param_specs,
+    norm_param_specs,
+    remat_policy,
+    unembed_apply,
+)
+
+
+def _layout(cfg: ModelConfig):
+    q = cfg.cross_attn_period
+    n_groups = cfg.num_layers // q
+    per_group = q - 1               # self layers per group, then 1 cross layer
+    return n_groups, per_group
+
+
+def cross_layer_param_specs(cfg: ModelConfig):
+    return {
+        "ln1": norm_param_specs(cfg),
+        "attn": attn_param_specs(cfg),
+        "gate_attn": spec((), (), "zeros", dtype=jnp.float32),
+        "ln2": norm_param_specs(cfg),
+        "mlp": mlp_param_specs(cfg, cfg.d_ff),
+        "gate_mlp": spec((), (), "zeros", dtype=jnp.float32),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    n_groups, per_group = _layout(cfg)
+    return {
+        "embed": embed_param_specs(cfg),
+        "self_layers": stack_specs(
+            stack_specs(tf.layer_param_specs(cfg), per_group), n_groups),
+        "cross_layers": stack_specs(cross_layer_param_specs(cfg), n_groups),
+        "ln_f": norm_param_specs(cfg),
+    }
+
+
+def _cross_layer(p, cfg: ModelConfig, x, vision, positions, vis_positions, ctx,
+                 cross_kv=None):
+    h = apply_norm(p["ln1"], x, cfg)
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"])
+        out = attention_core(q, cross_kv["k"], cross_kv["v"],
+                             q_positions=positions, kv_positions=vis_positions,
+                             causal=False, window=0, softcap=None,
+                             scale=cfg.resolved_head_dim ** -0.5)
+        a = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+        kv = cross_kv
+    else:
+        a, kv = attn_apply(p["attn"], cfg, h, positions=positions, kv_x=vision,
+                           kv_positions=vis_positions, causal=False, window=0,
+                           ctx=ctx, use_rope=False)
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
+    h = apply_norm(p["ln2"], x, cfg)
+    m = mlp_apply(p["mlp"], cfg, h, ctx)
+    return x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * m, kv
+
+
+def forward(params, cfg: ModelConfig, tokens, vision,
+            ctx: Optional[Ctx] = None, return_cache: bool = False):
+    """tokens: (B, S); vision: (B, T_vis, d_model) stubbed patch embeddings."""
+    b, s = tokens.shape
+    t_vis = vision.shape[1]
+    x = embed_apply(params["embed"], cfg, tokens, ctx)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    vis_positions = jnp.broadcast_to(jnp.arange(t_vis)[None, :], (b, t_vis))
+    policy = remat_policy(cfg)
+
+    def group_body(x, xs):
+        p_group, p_cross = xs
+        ks, vs = [], []
+        for j in range(_layout(cfg)[1]):
+            p_layer = jax.tree.map(lambda a: a[j], p_group)
+            x, _, kv = tf.layer_apply(p_layer, cfg, x, positions=positions,
+                                      window=0, ctx=ctx)
+            ks.append(kv["k"])
+            vs.append(kv["v"])
+        x, ckv = _cross_layer(p_cross, cfg, x, vision, positions,
+                              vis_positions, ctx)
+        if return_cache:
+            return x, (jnp.stack(ks), jnp.stack(vs), ckv["k"], ckv["v"])
+        return x, None
+
+    fn = group_body if policy is None else jax.checkpoint(group_body, policy=policy)
+    x, ys = jax.lax.scan(fn, x, (params["self_layers"], params["cross_layers"]))
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = unembed_apply(params["embed"], cfg, x, ctx)
+    if return_cache:
+        ks, vs, cks, cvs = ys
+        cache = {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs,
+                 "pos": jnp.full((), s, jnp.int32)}
+        return logits, jnp.zeros((), jnp.float32), cache
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    n_groups, per_group = _layout(cfg)
+    k, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    kv = spec((n_groups, per_group, batch, max_len, k, hd),
+              ("layers", None, "cache_batch", "cache_seq", "kv_heads", "cache_hd"),
+              "zeros")
+    ckv = spec((n_groups, batch, cfg.vision_seq, k, hd),
+               ("layers", "cache_batch", None, "kv_heads", "cache_hd"), "zeros")
+    return {"k": kv, "v": kv, "cross_k": ckv, "cross_v": ckv,
+            "pos": spec((), (), "zeros", dtype=jnp.int32)}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens,
+                ctx: Optional[Ctx] = None):
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    t_vis = cache["cross_k"].shape[2]
+    vis_positions = jnp.broadcast_to(jnp.arange(t_vis)[None, :], (b, t_vis))
+    x = embed_apply(params["embed"], cfg, tokens, ctx)
+
+    def group_body(x, xs):
+        p_group, p_cross, ck_g, cv_g, xk, xv = xs
+        ks, vs = [], []
+        for j in range(_layout(cfg)[1]):
+            p_layer = jax.tree.map(lambda a: a[j], p_group)
+            x, _, kv = tf.layer_apply(p_layer, cfg, x, positions=positions,
+                                      window=0, ctx=ctx,
+                                      cache={"k": ck_g[j], "v": cv_g[j]},
+                                      cache_pos=pos)
+            ks.append(kv["k"])
+            vs.append(kv["v"])
+        x, _ = _cross_layer(p_cross, cfg, x, None, positions, vis_positions,
+                            ctx, cross_kv={"k": xk, "v": xv})
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    x, (ks, vs) = jax.lax.scan(
+        group_body, x,
+        (params["self_layers"], params["cross_layers"], cache["k"], cache["v"],
+         cache["cross_k"], cache["cross_v"]))
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = unembed_apply(params["embed"], cfg, x, ctx)
+    return logits, {"k": ks, "v": vs, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"], "pos": pos + 1}

@@ -1,0 +1,190 @@
+"""Whisper-large-v3 backbone: encoder-decoder transformer.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, encoder_seq, d_model) directly into the
+encoder. Positional information uses (parameter-free) sinusoidal embeddings
+so parameter shapes stay independent of the assigned sequence lengths
+(real whisper uses learned decoder positions; noted in DESIGN.md).
+
+Decode: decoder self-attn KV cache of the assigned length plus cross-attn
+K/V precomputed once from the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.common import spec, stack_specs
+from repro.models.layers import (
+    Ctx,
+    apply_norm,
+    attn_apply,
+    attn_param_specs,
+    constrain,
+    embed_apply,
+    embed_param_specs,
+    mlp_apply,
+    mlp_param_specs,
+    norm_param_specs,
+    remat_policy,
+    sinusoidal_positions,
+    unembed_apply,
+    _project_qkv,
+)
+
+
+# ------------------------------------------------------------------ params
+
+def enc_layer_param_specs(cfg: ModelConfig):
+    return {
+        "ln1": norm_param_specs(cfg),
+        "attn": attn_param_specs(cfg),
+        "ln2": norm_param_specs(cfg),
+        "mlp": mlp_param_specs(cfg, cfg.d_ff),
+    }
+
+
+def dec_layer_param_specs(cfg: ModelConfig):
+    return {
+        "ln1": norm_param_specs(cfg),
+        "self_attn": attn_param_specs(cfg),
+        "ln2": norm_param_specs(cfg),
+        "cross_attn": attn_param_specs(cfg),
+        "ln3": norm_param_specs(cfg),
+        "mlp": mlp_param_specs(cfg, cfg.d_ff),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    return {
+        "embed": embed_param_specs(cfg),
+        "enc_layers": stack_specs(enc_layer_param_specs(cfg), cfg.encoder_layers),
+        "enc_ln_f": norm_param_specs(cfg),
+        "layers": stack_specs(dec_layer_param_specs(cfg), cfg.num_layers),
+        "ln_f": norm_param_specs(cfg),
+    }
+
+
+# ----------------------------------------------------------------- encoder
+
+def encode(params, cfg: ModelConfig, frames, ctx: Optional[Ctx] = None):
+    """frames: (B, T_enc, d_model) stubbed frame embeddings -> (B, T_enc, d)."""
+    b, t, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+    x = frames + sinusoidal_positions(pos, cfg.d_model).astype(frames.dtype)
+    x = constrain(ctx, x, ("batch", "seq", "embed"))
+    policy = remat_policy(cfg)
+
+    def body(x, p_layer):
+        h = apply_norm(p_layer["ln1"], x, cfg)
+        a, _ = attn_apply(p_layer["attn"], cfg, h, positions=pos, causal=False,
+                          window=0, ctx=ctx, use_rope=False)
+        x = x + a
+        h = apply_norm(p_layer["ln2"], x, cfg)
+        return x + mlp_apply(p_layer["mlp"], cfg, h, ctx), None
+
+    fn = body if policy is None else jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return apply_norm(params["enc_ln_f"], x, cfg)
+
+
+# ----------------------------------------------------------------- decoder
+
+def _dec_layer(p, cfg: ModelConfig, x, enc_out, positions, enc_positions, ctx,
+               cache=None, cache_pos=None, cross_kv=None):
+    h = apply_norm(p["ln1"], x, cfg)
+    a, kv = attn_apply(p["self_attn"], cfg, h, positions=positions, causal=True,
+                       window=0, ctx=ctx, cache=cache, cache_pos=cache_pos,
+                       use_rope=False)
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg)
+    if cross_kv is not None:
+        # decode: reuse precomputed cross K/V
+        from repro.models.layers import attention_core
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross_attn"]["wq"])
+        if cfg.qkv_bias:
+            q = q + p["cross_attn"]["bq"]
+        scale = cfg.resolved_head_dim ** -0.5
+        out = attention_core(q, cross_kv["k"], cross_kv["v"],
+                             q_positions=positions, kv_positions=enc_positions,
+                             causal=False, window=0, softcap=None, scale=scale)
+        c = jnp.einsum("bshk,hkd->bsd", out, p["cross_attn"]["wo"])
+        ckv = cross_kv
+    else:
+        c, ckv = attn_apply(p["cross_attn"], cfg, h, positions=positions,
+                            kv_x=enc_out, kv_positions=enc_positions,
+                            causal=False, window=0, ctx=ctx, use_rope=False)
+    x = x + c
+    h = apply_norm(p["ln3"], x, cfg)
+    return x + mlp_apply(p["mlp"], cfg, h, ctx), kv, ckv
+
+
+def forward(params, cfg: ModelConfig, tokens, frames,
+            ctx: Optional[Ctx] = None, return_cache: bool = False):
+    """tokens: (B, S); frames: (B, T_enc, d_model)."""
+    b, s = tokens.shape
+    enc_out = encode(params, cfg, frames, ctx)
+    t_enc = enc_out.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    enc_positions = jnp.broadcast_to(jnp.arange(t_enc)[None, :], (b, t_enc))
+    x = embed_apply(params["embed"], cfg, tokens, ctx)
+    x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+    policy = remat_policy(cfg)
+
+    def body(x, p_layer):
+        x, kv, ckv = _dec_layer(p_layer, cfg, x, enc_out, positions,
+                                enc_positions, ctx)
+        if return_cache:
+            return x, (kv["k"], kv["v"], ckv["k"], ckv["v"])
+        return x, None
+
+    fn = body if policy is None else jax.checkpoint(body, policy=policy)
+    x, ys = jax.lax.scan(fn, x, params["layers"])
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = unembed_apply(params["embed"], cfg, x, ctx)
+    if return_cache:
+        ks, vs, cks, cvs = ys
+        cache = {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs,
+                 "pos": jnp.full((), s, jnp.int32)}
+        return logits, jnp.zeros((), jnp.float32), cache
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    k, hd, l = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+    kv = spec((l, batch, max_len, k, hd),
+              ("layers", "cache_batch", "cache_seq", "kv_heads", "cache_hd"),
+              "zeros")
+    ckv = spec((l, batch, cfg.encoder_seq, k, hd),
+               ("layers", "cache_batch", None, "kv_heads", "cache_hd"), "zeros")
+    return {"k": kv, "v": kv, "cross_k": ckv, "cross_v": ckv,
+            "pos": spec((), (), "zeros", dtype=jnp.int32)}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens,
+                ctx: Optional[Ctx] = None):
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    t_enc = cache["cross_k"].shape[2]
+    enc_positions = jnp.broadcast_to(jnp.arange(t_enc)[None, :], (b, t_enc))
+    x = embed_apply(params["embed"], cfg, tokens, ctx)
+    x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+
+    def body(x, xs):
+        p_layer, ck, cv, xk, xv = xs
+        x, kv, _ = _dec_layer(p_layer, cfg, x, None, positions, enc_positions,
+                              ctx, cache={"k": ck, "v": cv}, cache_pos=pos,
+                              cross_kv={"k": xk, "v": xv})
+        return x, (kv["k"], kv["v"])
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = unembed_apply(params["embed"], cfg, x, ctx)
+    return logits, {"k": ks, "v": vs, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"], "pos": pos + 1}

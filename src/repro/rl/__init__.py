@@ -1,0 +1,2 @@
+"""RLVR algorithm substrate: rollout, GRPO/PPO objectives, verifiable
+rewards, data pipeline."""

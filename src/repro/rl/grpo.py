@@ -1,0 +1,153 @@
+"""GRPO (group-relative policy optimization) objective + step builders.
+
+These step functions are the *primitives* PlexRL schedules (paper Tab. 2):
+``compute_log_prob`` (forward), ``update_actor`` (forward+backward+step) and
+the serving-side prefill/decode steps. Each builder closes over a model and
+sharding context and returns a pure function suitable for ``jax.jit`` with
+explicit in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Ctx
+from repro.models.registry import Model
+from repro.train import optimizer as opt
+from repro.train.train_state import TrainState
+
+
+@dataclasses.dataclass(frozen=True)
+class GRPOConfig:
+    clip_eps: float = 0.2
+    kl_coef: float = 0.0        # optional KL vs behavior policy
+    aux_coef: float = 0.01      # MoE load-balance weight
+    group_size: int = 8         # rollouts per prompt
+
+
+def token_logprobs(logits, tokens):
+    """logits: (B, S, V); tokens: (B, S). Next-token logprobs (B, S-1)."""
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(logp, tokens[:, 1:, None], axis=-1)[..., 0]
+
+
+def group_relative_advantages(rewards, group_size: int, eps: float = 1e-6):
+    """rewards: (B,) with B = n_prompts * group_size (grouped contiguously)."""
+    b = rewards.shape[0]
+    g = rewards.reshape(b // group_size, group_size)
+    mean = g.mean(axis=1, keepdims=True)
+    std = g.std(axis=1, keepdims=True)
+    return ((g - mean) / (std + eps)).reshape(b)
+
+
+def grpo_loss(params, model: Model, batch: Dict[str, Any], cfg: GRPOConfig,
+              ctx: Optional[Ctx] = None):
+    """Clipped importance-sampling surrogate with group-relative advantages.
+
+    batch: tokens (B,S), behavior_logprobs (B,S), advantages (B,),
+    loss_mask (B,S) — mask selects response tokens.
+    """
+    logits, aux = model.forward(params, batch, ctx)[:2]
+    logp = token_logprobs(logits, batch["tokens"])           # (B, S-1)
+    behave = batch["behavior_logprobs"][:, 1:]
+    mask = batch["loss_mask"][:, 1:]
+    adv = batch["advantages"][:, None]
+
+    log_ratio = logp - behave
+    ratio = jnp.exp(log_ratio)
+    clipped = jnp.clip(ratio, 1.0 - cfg.clip_eps, 1.0 + cfg.clip_eps)
+    surrogate = jnp.minimum(ratio * adv, clipped * adv)
+    denom = jnp.clip(mask.sum(), 1.0)
+    pg_loss = -(surrogate * mask).sum() / denom
+    # k3 KL estimator (Schulman): unbiased, positive. log_ratio is clamped
+    # so an off-policy outlier cannot overflow exp() into inf (which would
+    # NaN the loss even at kl_coef == 0 via 0 * inf).
+    lr_c = jnp.clip(log_ratio, -20.0, 20.0)
+    kl = ((jnp.exp(-lr_c) - 1.0 + lr_c) * mask).sum() / denom
+    loss = pg_loss + cfg.aux_coef * aux
+    if cfg.kl_coef:
+        loss = loss + cfg.kl_coef * kl
+    metrics = {
+        "pg_loss": pg_loss,
+        "kl": kl,
+        "aux": aux,
+        "ratio_mean": (ratio * mask).sum() / denom,
+        "entropy_proxy": -(logp * mask).sum() / denom,
+    }
+    return loss, metrics
+
+
+# -------------------------------------------------------------- step fns
+
+def compute_grads(params, model: Model, batch, grpo_cfg: GRPOConfig,
+                  ctx: Optional[Ctx], grad_accum: int = 1):
+    """Grads of grpo_loss, with optional microbatched gradient accumulation
+    (activation-memory control for large train cells). Accumulates in f32."""
+    if grad_accum <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            grpo_loss, has_aux=True)(params, model, batch, grpo_cfg, ctx)
+        return grads, dict(metrics, loss=loss)
+
+    def split(a):
+        return a.reshape((grad_accum, a.shape[0] // grad_accum) + a.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def mb_step(acc, mbatch):
+        (loss, metrics), grads = jax.value_and_grad(
+            grpo_loss, has_aux=True)(params, model, mbatch, grpo_cfg, ctx)
+        acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+        return acc, dict(metrics, loss=loss)
+
+    grads, metrics = jax.lax.scan(mb_step, zeros, micro)
+    grads = jax.tree.map(lambda g, p: (g / grad_accum).astype(p.dtype),
+                         grads, params)
+    return grads, jax.tree.map(lambda m: m.mean(), metrics)
+
+
+def make_update_actor(model: Model, grpo: GRPOConfig = GRPOConfig(),
+                      adamw: opt.AdamWConfig = opt.AdamWConfig(),
+                      ctx: Optional[Ctx] = None, grad_accum: int = 1):
+    """``update_actor`` primitive: fwd+bwd+AdamW. (state, batch) -> (state, metrics)."""
+
+    def step(state: TrainState, batch):
+        grads, metrics = compute_grads(state.params, model, batch, grpo, ctx,
+                                       grad_accum)
+        new_params, new_opt, opt_metrics = opt.update(
+            grads, state.opt_state, state.params, adamw)
+        metrics = dict(metrics, **opt_metrics)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return step
+
+
+def make_compute_log_prob(model: Model, ctx: Optional[Ctx] = None):
+    """``compute_log_prob`` primitive (paper Tab. 2): forward-only logprobs."""
+
+    def step(params, batch):
+        logits, _ = model.forward(params, batch, ctx)[:2]
+        return token_logprobs(logits, batch["tokens"])
+
+    return step
+
+
+def make_prefill(model: Model, ctx: Optional[Ctx] = None,
+                 cache_len: Optional[int] = None):
+    def step(params, batch):
+        logits, _, cache = model.forward(params, batch, ctx, return_cache=True)
+        return logits[:, -1:], cache
+
+    return step
+
+
+def make_decode(model: Model, ctx: Optional[Ctx] = None):
+    def step(params, cache, batch):
+        logits, new_cache = model.decode_step(params, cache, batch, ctx)
+        return logits, new_cache
+
+    return step

@@ -1,0 +1,80 @@
+"""PPO objective (actor + value head) — the paper's baseline algorithm family.
+
+PlexRL schedules PPO's extra model roles (critic, reference) as additional
+WPG deployments; this module provides the losses so multi-role jobs can be
+expressed against the service API.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Ctx
+from repro.models.registry import Model
+from repro.rl.grpo import token_logprobs
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    clip_eps: float = 0.2
+    value_coef: float = 0.5
+    entropy_coef: float = 0.0
+    gae_lambda: float = 0.95
+    gamma: float = 1.0
+
+
+def gae_advantages(rewards, values, mask, cfg: PPOConfig):
+    """Generalized advantage estimation over token sequences.
+
+    rewards/values/mask: (B, T). Rewards are typically terminal-only for
+    RLVR (verifiable reward at the last response token).
+    """
+    b, t = rewards.shape
+
+    def step(carry, xs):
+        r, v, v_next, m = xs
+        delta = r + cfg.gamma * v_next * m - v
+        adv = delta + cfg.gamma * cfg.gae_lambda * m * carry
+        return adv, adv
+
+    v_next = jnp.concatenate([values[:, 1:], jnp.zeros((b, 1))], axis=1)
+    xs = (rewards.T, values.T, v_next.T, mask.T)
+    xs = jax.tree.map(lambda a: a[::-1], xs)
+    _, advs = jax.lax.scan(step, jnp.zeros((b,)), xs)
+    return advs[::-1].T
+
+
+def ppo_loss(params, model: Model, batch: Dict[str, Any], cfg: PPOConfig,
+             ctx: Optional[Ctx] = None):
+    """batch: tokens, behavior_logprobs, advantages (B, S) token-level,
+    value_targets (B, S), loss_mask."""
+    logits, aux = model.forward(params, batch, ctx)[:2]
+    logp = token_logprobs(logits, batch["tokens"])
+    behave = batch["behavior_logprobs"][:, 1:]
+    mask = batch["loss_mask"][:, 1:]
+    adv = batch["advantages"][:, 1:] if batch["advantages"].ndim == 2 \
+        else batch["advantages"][:, None]
+
+    ratio = jnp.exp(logp - behave)
+    clipped = jnp.clip(ratio, 1.0 - cfg.clip_eps, 1.0 + cfg.clip_eps)
+    denom = jnp.clip(mask.sum(), 1.0)
+    pg = -(jnp.minimum(ratio * adv, clipped * adv) * mask).sum() / denom
+
+    loss = pg + 0.01 * aux
+    if cfg.entropy_coef:
+        p = jax.nn.softmax(logits[:, :-1].astype(jnp.float32), -1)
+        ent = -(p * jnp.log(p + 1e-9)).sum(-1)
+        loss = loss - cfg.entropy_coef * (ent * mask).sum() / denom
+    return loss, {"pg_loss": pg}
+
+
+def value_loss(values, targets, old_values, mask, cfg: PPOConfig):
+    """Clipped value loss for a critic deployment."""
+    v_clip = old_values + jnp.clip(values - old_values, -cfg.clip_eps, cfg.clip_eps)
+    l1 = jnp.square(values - targets)
+    l2 = jnp.square(v_clip - targets)
+    denom = jnp.clip(mask.sum(), 1.0)
+    return cfg.value_coef * (jnp.maximum(l1, l2) * mask).sum() / denom

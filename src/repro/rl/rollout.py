@@ -1,0 +1,77 @@
+"""Autoregressive rollout with KV cache: prefill + decode loop.
+
+Used by the end-to-end examples and by the PlexRL ``generate`` service
+primitive. Sampling is temperature-based with greedy as temperature->0;
+returns behavior logprobs for importance-sampled objectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Ctx
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class RolloutConfig:
+    max_new_tokens: int = 32
+    temperature: float = 1.0
+    greedy: bool = False
+    eos_id: int = 2
+
+
+def _pad_cache(cache, extra: int):
+    """Grow self-attn cache seq dims by `extra` slots (zero-filled)."""
+    out = {}
+    for k, v in cache.items():
+        if k in ("k", "v", "attn_k", "attn_v") and hasattr(v, "ndim") and v.ndim >= 4:
+            ax = v.ndim - 3
+            pad = [(0, 0)] * v.ndim
+            pad[ax] = (0, extra)
+            out[k] = jnp.pad(v, pad)
+        else:
+            out[k] = v
+    return out
+
+
+def rollout(model: Model, params, prompt_tokens, rng,
+            cfg: RolloutConfig = RolloutConfig(),
+            ctx: Optional[Ctx] = None,
+            extra_inputs: Optional[Dict[str, Any]] = None
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Generate completions. prompt_tokens: (B, P) int32.
+
+    Returns (completions (B, N), logprobs (B, N), done_mask (B, N)).
+    """
+    batch = {"tokens": prompt_tokens, **(extra_inputs or {})}
+    last_logits, _, cache = model.forward(params, batch, ctx, return_cache=True)
+    last_logits = last_logits[:, -1]
+    cache = _pad_cache(cache, cfg.max_new_tokens)
+
+    def sample(logits, key):
+        logits = logits.astype(jnp.float32)
+        if cfg.greedy or cfg.temperature <= 0:
+            tok = jnp.argmax(logits, axis=-1)
+        else:
+            tok = jax.random.categorical(key, logits / cfg.temperature, axis=-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return tok, jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+
+    def step(carry, key):
+        logits, cache, alive = carry
+        tok, logp = sample(logits, key)
+        tok = jnp.where(alive, tok, cfg.eos_id)
+        new_logits, new_cache = model.decode_step(params, cache,
+                                                  {"tokens": tok[:, None]}, ctx)
+        alive = alive & (tok != cfg.eos_id)
+        return (new_logits[:, -1], new_cache, alive), (tok, logp, alive)
+
+    keys = jax.random.split(rng, cfg.max_new_tokens)
+    b = prompt_tokens.shape[0]
+    init = (last_logits, cache, jnp.ones((b,), bool))
+    _, (toks, logps, alive) = jax.lax.scan(step, init, keys)
+    return toks.T, logps.T, alive.T

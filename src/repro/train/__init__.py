@@ -1,0 +1,2 @@
+"""Training substrate: optimizer (ZeRO-sharded AdamW), train state,
+checkpointing."""

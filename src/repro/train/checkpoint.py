@@ -1,0 +1,107 @@
+"""Checkpointing: canonical-key shard save/restore.
+
+Checkpoints are materialised from the canonicalised state view (paper
+§4.5.3: "checkpoint creation is treated as materialisation from managed
+state"): every tensor is stored under its canonical key, independent of any
+process-local layout, so restore works across different parallel configs
+(resharding = slicing per the target PartitionSpec at load).
+
+Layout:
+  <dir>/<name>/metadata.json           step, keys, shapes, dtypes
+  <dir>/<name>/shard_<i>.npz           canonical_key -> ndarray
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+
+_SHARD_BYTES = 512 * 1024 * 1024
+
+
+def _to_numpy(x):
+    x = np.asarray(jax.device_get(x))
+    if x.dtype == jnp.bfloat16:
+        return x.view(np.uint16), "bfloat16"
+    return x, str(x.dtype)
+
+
+def _from_numpy(x, dtype: str):
+    if dtype == "bfloat16":
+        return x.view(jnp.bfloat16)
+    return x
+
+
+def save(path: str, tree, step: int = 0,
+         extra_meta: Optional[Dict[str, Any]] = None) -> str:
+    """Save a pytree checkpoint. Returns the checkpoint directory."""
+    os.makedirs(path, exist_ok=True)
+    flat = common.canonical_flat(tree, is_leaf=lambda x: hasattr(x, "shape"))
+    meta: Dict[str, Any] = {"step": int(step), "tensors": {},
+                            **(extra_meta or {})}
+    shards: list[dict] = [{}]
+    sizes = [0]
+    for key, leaf in flat.items():
+        arr, dtype = _to_numpy(leaf)
+        meta["tensors"][key] = {
+            "shape": list(arr.shape), "dtype": dtype,
+            "shard": len(shards) - 1,
+        }
+        if sizes[-1] + arr.nbytes > _SHARD_BYTES and shards[-1]:
+            shards.append({})
+            sizes.append(0)
+            meta["tensors"][key]["shard"] = len(shards) - 1
+        shards[-1][key.replace("/", "__")] = arr
+        sizes[-1] += arr.nbytes
+    for i, shard in enumerate(shards):
+        np.savez(os.path.join(path, f"shard_{i}.npz"), **shard)
+    tmp = os.path.join(path, "metadata.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, os.path.join(path, "metadata.json"))  # atomic commit
+    return path
+
+
+def load_flat(path: str) -> tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    with open(os.path.join(path, "metadata.json")) as f:
+        meta = json.load(f)
+    out: Dict[str, np.ndarray] = {}
+    by_shard: Dict[int, list] = {}
+    for key, info in meta["tensors"].items():
+        by_shard.setdefault(info["shard"], []).append((key, info))
+    for shard_idx, entries in by_shard.items():
+        with np.load(os.path.join(path, f"shard_{shard_idx}.npz")) as z:
+            for key, info in entries:
+                out[key] = _from_numpy(z[key.replace("/", "__")], info["dtype"])
+    return out, meta
+
+
+def restore(path: str, template_tree, shardings=None):
+    """Restore into the template's structure; optionally device_put with the
+    given shardings tree (on-the-fly resharding)."""
+    flat, meta = load_flat(path)
+    tree = common.canonical_unflatten(
+        template_tree, flat, is_leaf=lambda x: hasattr(x, "shape"))
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree, meta
+
+
+def latest(dirpath: str) -> Optional[str]:
+    """Find the newest complete checkpoint under dirpath (step_* naming)."""
+    if not os.path.isdir(dirpath):
+        return None
+    cands = []
+    for name in os.listdir(dirpath):
+        full = os.path.join(dirpath, name)
+        if os.path.exists(os.path.join(full, "metadata.json")):
+            cands.append((os.path.getmtime(full), full))
+    return max(cands)[1] if cands else None

@@ -1,0 +1,136 @@
+"""AdamW with ZeRO-style sharded moments (pure JAX, no external deps).
+
+The paper runs ZeRO stage 2 on all trials: parameters follow the model's
+TP layout (replicated over ``data``), while optimizer moments are
+additionally sharded over the ``data`` axis. ``zero_moment_spec`` derives the
+moment PartitionSpec from a parameter's spec by assigning the ``data`` axis to
+the first divisible unsharded dim.
+
+A host-resident optimizer step (the paper's ZeRO-offload / §4.5.4 CPU
+optimizer) lives in repro.core.state_manager, operating on canonicalised
+offloaded state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-5
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    warmup_steps: int = 10
+    # moments dtype: f32 is the safe default; bf16 halves optimizer memory
+    moment_dtype: Any = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init(params, cfg: AdamWConfig = AdamWConfig()) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def abstract_state(abstract_params, cfg: AdamWConfig = AdamWConfig()) -> AdamWState:
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype)
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(sds, abstract_params),
+        nu=jax.tree.map(sds, abstract_params),
+    )
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(grads, state: AdamWState, params, cfg: AdamWConfig = AdamWConfig()):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    step = state.step + 1
+    lr = _schedule(cfg, state.step)
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = cfg.b1 * m32 + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(g)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), {
+        "grad_norm": gnorm, "lr": lr}
+
+
+# ------------------------------------------------------------- ZeRO specs
+
+def zero_moment_spec(param_spec: P, shape, mesh: Mesh,
+                     zero_axis: str = "data") -> P:
+    """Derive a moment PartitionSpec: param spec + ``zero_axis`` on the first
+    divisible unsharded dim (ZeRO-2 moment sharding)."""
+    if zero_axis not in mesh.axis_names:
+        return param_spec
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a:
+                used.add(a)
+    if zero_axis in used:
+        return param_spec
+    n = mesh.shape[zero_axis]
+    for i, e in enumerate(entries):
+        if e is None and shape[i] % n == 0 and shape[i] >= n:
+            entries[i] = zero_axis
+            while entries and entries[-1] is None:
+                entries.pop()
+            return P(*entries)
+    return param_spec
+
+
+def state_partition_specs(param_pspecs, abstract_params, mesh: Mesh,
+                          zero: bool = True) -> AdamWState:
+    """PartitionSpecs for the full AdamWState."""
+    if zero:
+        mom = jax.tree.map(
+            lambda ps, ap: zero_moment_spec(ps, ap.shape, mesh),
+            param_pspecs, abstract_params,
+            is_leaf=lambda x: isinstance(x, P))
+    else:
+        mom = param_pspecs
+    return AdamWState(step=P(), mu=mom, nu=mom)

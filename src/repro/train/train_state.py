@@ -1,0 +1,51 @@
+"""TrainState pytree + sharding-spec derivation for the full state."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import sharding as shd
+from repro.models.registry import Model
+from repro.train import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: opt.AdamWState
+    step: jax.Array
+
+
+def init(model: Model, rng, adamw: opt.AdamWConfig = opt.AdamWConfig()) -> TrainState:
+    params = model.init_params(rng)
+    return TrainState(params=params, opt_state=opt.init(params, adamw),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract(model: Model, adamw: opt.AdamWConfig = opt.AdamWConfig()) -> TrainState:
+    ap = model.abstract_params()
+    return TrainState(params=ap, opt_state=opt.abstract_state(ap, adamw),
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def partition_specs(model: Model, mesh: Mesh, rules: shd.Rules,
+                    zero: bool = True) -> TrainState:
+    """PartitionSpecs for TrainState: params by logical axes; moments with
+    ZeRO sharding over ``data``."""
+    axes = model.logical_axes()
+    ap = model.abstract_params()
+    pspecs = shd.tree_partition_specs(axes, mesh, rules, ap)
+    return TrainState(
+        params=pspecs,
+        opt_state=opt.state_partition_specs(pspecs, ap, mesh, zero=zero),
+        step=P(),
+    )
+
+
+def shardings(model: Model, mesh: Mesh, rules: shd.Rules,
+              zero: bool = True) -> TrainState:
+    specs = partition_specs(model, mesh, rules, zero)
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,9 @@
+import os
+
+# Keep tests on the single real CPU device (the 512-device flag is ONLY for
+# the dry-run process — see src/repro/launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,131 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _qkv(b, s, h, kh, d, dtype, seed=0, t=None):
+    t = t or s
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, t, kh, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, t, kh, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+TOL = {jnp.float32: dict(rtol=2e-3, atol=2e-3),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kh,d", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 256, 8, 2, 64),      # GQA 4:1
+    (1, 192, 4, 1, 128),     # MQA + non-block-multiple seq (padding path)
+])
+def test_flash_attention_sweep(b, s, h, kh, d, dtype):
+    q, k, v = _qkv(b, s, h, kh, d, dtype)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    kk = jnp.repeat(k, h // kh, 2)
+    vv = jnp.repeat(v, h // kh, 2)
+    expect = ref.ref_attention(q, kk, vv, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [0, 32, 64])
+def test_flash_attention_sliding_window(window):
+    q, k, v = _qkv(1, 128, 4, 2, 64, jnp.float32, seed=1)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64)
+    kk, vv = jnp.repeat(k, 2, 2), jnp.repeat(v, 2, 2)
+    expect = ref.ref_attention(q, kk, vv, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_softcap_gemma():
+    q, k, v = _qkv(1, 128, 4, 4, 64, jnp.float32, seed=2)
+    out = ops.flash_attention(q, k, v, causal=True, softcap=50.0,
+                              scale=0.125, block_q=64, block_k=64)
+    expect = ref.ref_attention(q, k, v, causal=True, softcap=50.0, scale=0.125)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("pos", [0, 63, 100, 255])
+def test_decode_attention_sweep(pos, dtype):
+    b, h, kh, d, t = 2, 8, 2, 64, 256
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32).astype(dtype)
+    kc = jax.random.normal(ks[1], (b, t, kh, d), jnp.float32).astype(dtype)
+    vc = jax.random.normal(ks[2], (b, t, kh, d), jnp.float32).astype(dtype)
+    out = ops.decode_attention(q, kc, vc, pos, block_k=64)
+    expect = ref.ref_decode_attention(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 16, 32, 16),
+    (2, 96, 4, 8, 16, 32),       # padding path (96 % 32 == 0, but try 24)
+    (1, 72, 2, 8, 16, 24),
+])
+def test_ssd_kernel_sweep(b, s, h, p, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    y, st = ops.ssd(x, dt, A, B, C, chunk=chunk)
+    ye, ste = ref.ref_ssd_naive(x.astype(jnp.float32), dt, A, B, C)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ye, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(ste),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_ssd_kernel_matches_model_oracle():
+    """Kernel == repro.models.mamba2.ssd_chunked (the model's XLA path)."""
+    b, s, h, p, n = 2, 64, 4, 16, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    y, st = ops.ssd(x, dt, A, B, C, chunk=16)
+    ye, ste = ref.ref_ssd(x, dt, A, B, C, chunk=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(ste), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_hd_parallel_decode_matches_attention_core():
+    """The grouped (kh, g) decode einsum path == the standard core."""
+    from repro.models.layers import _hd_parallel_decode_attention, attention_core
+    b, s, h, kh, d, t = 2, 1, 8, 2, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, t, kh, d))
+    v = jax.random.normal(ks[2], (b, t, kh, d))
+    pos = jnp.full((b, s), 40)
+    kv_mask = jnp.arange(t) <= 40
+    out = _hd_parallel_decode_attention(q, k, v, q_positions=pos,
+                                        kv_mask=kv_mask, window=0,
+                                        softcap=None, scale=d ** -0.5)
+    expect = attention_core(q, k, v, q_positions=pos,
+                            kv_positions=jnp.arange(t), causal=True,
+                            window=0, softcap=None, scale=d ** -0.5,
+                            kv_mask=kv_mask, q_chunk=0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,128 @@
+"""RL substrate: GRPO math, logprob alignment, rollout, rewards, data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ModelConfig
+from repro.models.registry import build_model
+from repro.rl import data, grpo, reward, rollout
+
+
+def _tiny_model():
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+                      vocab_size=64, tie_embeddings=True)
+    m = build_model(cfg)
+    return m, m.init_params(jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------------- GRPO
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 8))
+def test_group_relative_advantages_zero_mean(n_groups, g):
+    rng = np.random.default_rng(n_groups * 10 + g)
+    r = jnp.asarray(rng.normal(size=n_groups * g).astype(np.float32))
+    adv = grpo.group_relative_advantages(r, g)
+    grouped = np.asarray(adv).reshape(n_groups, g)
+    np.testing.assert_allclose(grouped.mean(1), 0.0, atol=1e-5)
+
+
+def test_group_advantages_constant_reward_is_zero():
+    r = jnp.ones((8,))
+    adv = grpo.group_relative_advantages(r, 4)
+    np.testing.assert_allclose(np.asarray(adv), 0.0, atol=1e-4)
+
+
+def test_token_logprobs_alignment():
+    """token_logprobs[:, j] must be log p(tokens[:, j+1] | prefix)."""
+    logits = jnp.zeros((1, 3, 4)).at[0, 0, 2].set(10.0)  # peak on token 2
+    tokens = jnp.asarray([[0, 2, 1]])
+    lp = grpo.token_logprobs(logits, tokens)
+    assert lp.shape == (1, 2)
+    assert float(lp[0, 0]) > -1e-3          # predicted token 2 at pos 1
+    assert float(lp[0, 1]) < -1.0           # uniform elsewhere
+
+
+def test_grpo_loss_zero_when_on_policy_and_zero_adv():
+    m, params = _tiny_model()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, 64)
+    logits, _ = m.forward(params, {"tokens": toks})
+    lp = grpo.token_logprobs(logits, toks)
+    batch = {
+        "tokens": toks,
+        "behavior_logprobs": jnp.pad(lp, ((0, 0), (1, 0))),
+        "advantages": jnp.zeros((4,)),
+        "loss_mask": jnp.ones((4, 8)),
+    }
+    loss, metrics = grpo.grpo_loss(params, m, batch, grpo.GRPOConfig(aux_coef=0.0))
+    assert abs(float(loss)) < 1e-5
+    assert abs(float(metrics["ratio_mean"]) - 1.0) < 1e-3
+    assert abs(float(metrics["kl"])) < 1e-5
+
+
+def test_grad_accum_matches_full_batch():
+    m, params = _tiny_model()
+    model_batch = m.dummy_batch(jax.random.PRNGKey(2),
+                                __import__("repro.configs",
+                                           fromlist=["ShapeSpec"]
+                                           ).ShapeSpec("t", "train", 8, 4))
+    g1, m1 = grpo.compute_grads(params, m, model_batch, grpo.GRPOConfig(),
+                                None, grad_accum=1)
+    g2, m2 = grpo.compute_grads(params, m, model_batch, grpo.GRPOConfig(),
+                                None, grad_accum=2)
+    # losses are means over microbatches; grads averaged — should be close
+    # (not exact: the loss normalises by per-microbatch mask sums)
+    n1 = float(jax.tree.reduce(
+        lambda a, b: a + jnp.sum(jnp.abs(b.astype(jnp.float32))), g1, 0.0))
+    n2 = float(jax.tree.reduce(
+        lambda a, b: a + jnp.sum(jnp.abs(b.astype(jnp.float32))), g2, 0.0))
+    assert n1 > 0 and n2 > 0
+    assert abs(n1 - n2) / max(n1, n2) < 0.35
+
+
+# ----------------------------------------------------------------- rollout
+def test_rollout_shapes_and_greedy_determinism():
+    m, params = _tiny_model()
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 6), 3, 64)
+    cfg = rollout.RolloutConfig(max_new_tokens=5, greedy=True)
+    t1, l1, a1 = rollout.rollout(m, params, prompts, jax.random.PRNGKey(4), cfg)
+    t2, l2, a2 = rollout.rollout(m, params, prompts, jax.random.PRNGKey(9), cfg)
+    assert t1.shape == (2, 5) and l1.shape == (2, 5)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))  # greedy
+    assert bool((l1 <= 0).all())
+
+
+# ------------------------------------------------------------------ reward
+def test_verifiable_reward_math():
+    assert reward.verify("the answer is 42", 42) == 1.0
+    assert reward.verify("i think 41", 42) == 0.0
+    assert reward.verify("no numbers here", 42) == 0.0
+    assert reward.extract_answer("12 + 3 = 15") == 15
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+def test_problem_generation_verifiable(difficulty, seed):
+    rng = np.random.default_rng(seed)
+    p = data.sample_problem(rng, difficulty)
+    # the answer string, formatted into a completion, must verify
+    assert reward.verify(f"... = {p.answer}", p.answer) == 1.0
+    # tokenizer roundtrip preserves the prompt
+    assert data.decode(data.encode(p.prompt)) == p.prompt
+
+
+def test_pack_rollout_batch_alignment():
+    prompts = np.full((4, 3), 5, np.int32)
+    comps = np.arange(8, dtype=np.int32).reshape(4, 2) + 3
+    logps = np.full((4, 2), -0.5, np.float32)
+    rewards = np.array([1, 0, 1, 0], np.float32)
+    b = data.pack_rollout_batch(prompts, comps, logps, rewards,
+                                group_size=2, seq_len=8)
+    assert b["tokens"].shape == (4, 8)
+    np.testing.assert_array_equal(b["tokens"][:, :3], prompts)
+    np.testing.assert_array_equal(b["tokens"][:, 3:5], comps)
+    np.testing.assert_array_equal(b["loss_mask"][:, 3:5], 1.0)
+    assert b["loss_mask"][:, :3].sum() == 0
+    np.testing.assert_allclose(b["behavior_logprobs"][:, 3:5], -0.5)

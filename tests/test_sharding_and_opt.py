@@ -1,0 +1,128 @@
+"""Sharding rule resolution properties + optimizer correctness + checkpoint
+roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.models import sharding as shd
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+
+
+def _mesh(data=2, model=1):
+    # only 1 real device in tests: use trivial mesh but exercise the logic
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class _FakeMesh:
+    """Shape-only stand-in so divisibility logic can be tested for the
+    production sizes without 512 devices."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(self.shape)
+
+
+@pytest.mark.parametrize("axes,shape,expect", [
+    (("vocab", "embed"), (151_936, 2560), P("model", "data")),
+    (("vocab", "embed"), (50_280, 2560), P(None, "data")),        # 50280 % 16 != 0
+    (("embed", "heads", "head_dim"), (2560, 32, 128), P("data", "model")),
+    (("embed", "heads", "head_dim"), (7168, 56, 128), P("data",)),  # 56 % 16
+    (("experts", "embed", "expert_mlp"), (128, 7168, 4864), P("model", "data")),
+    (("experts", "embed", "expert_mlp"), (40, 1536, 512), P(None, "data")),
+])
+def test_resolve_best_effort_divisibility(axes, shape, expect):
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    got = shd.resolve(axes, mesh, shd.RULES_FSDP_TP, shape=shape)
+    assert got == expect
+
+
+def test_resolve_cache_hd_fallback():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    axes = ("layers", "cache_batch", "cache_seq", "kv_heads", "cache_hd")
+    # kv divisible (gemma kv=16): kv takes model, head_dim unsharded
+    got = shd.resolve(axes, mesh, shd.RULES_TP, shape=(46, 128, 32768, 16, 128))
+    assert got == P(None, "data", None, "model")
+    # kv NOT divisible (qwen3 kv=8): the fallback gives head_dim the model
+    # axis (NOT seq — a decode-time dynamic-update-slice on a seq-sharded
+    # buffer forces SPMD rematerialisation)
+    got = shd.resolve(axes, mesh, shd.RULES_TP, shape=(36, 128, 32768, 8, 128))
+    assert got == P(None, "data", None, None, "model")
+    # prefill OUTPUT layout: seq-sharded over model
+    axes_out = ("layers", "cache_batch", "cache_seq_out", "kv_heads", None)
+    got = shd.resolve(axes_out, mesh, shd.RULES_TP,
+                      shape=(36, 32, 32768, 8, 128))
+    assert got == P(None, "data", "model")
+
+
+def test_resolve_never_reuses_mesh_axis():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    got = shd.resolve(("vocab", "mlp"), mesh, shd.RULES_TP, shape=(160, 160))
+    flat = [a for e in got for a in (e if isinstance(e, tuple) else (e,)) if a]
+    assert len(flat) == len(set(flat))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(["embed", "vocab", "heads", "mlp", None]),
+                min_size=1, max_size=4),
+       st.lists(st.integers(1, 4096), min_size=4, max_size=4))
+def test_resolve_divisibility_property(axes, dims):
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    shape = tuple(dims[:len(axes)])
+    spec = shd.resolve(tuple(axes), mesh, shd.RULES_FSDP_TP, shape=shape)
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes_t = entry if isinstance(entry, tuple) else (entry,)
+        total = int(np.prod([mesh.shape[a] for a in axes_t]))
+        assert shape[i] % total == 0
+
+
+# -------------------------------------------------------------- optimizer
+def test_adamw_first_step_matches_analytic():
+    cfg = opt.AdamWConfig(lr=1e-2, b1=0.9, b2=0.95, eps=1e-8,
+                          grad_clip=0.0, warmup_steps=0, weight_decay=0.0)
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    grads = {"w": jnp.full((4,), 0.5)}
+    state = opt.init(params, cfg)
+    new_p, new_s, metrics = opt.update(grads, state, params, cfg)
+    # after bias correction, first-step delta = lr * g/|g| = lr
+    np.testing.assert_allclose(np.asarray(new_p["w"]), 1.0 - 1e-2, rtol=1e-5)
+    assert int(new_s.step) == 1
+
+
+def test_grad_clip_scales_large_grads():
+    cfg = opt.AdamWConfig(grad_clip=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    grads = {"w": jnp.full((4,), 100.0)}
+    state = opt.init(params, cfg)
+    _, _, metrics = opt.update(grads, state, params, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0, rel=1e-3)
+
+
+def test_zero_moment_spec_adds_data_axis():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    got = opt.zero_moment_spec(P(None, "model"), (2560, 9728), mesh)
+    assert got == P("data", "model")
+    # already data-sharded param: unchanged
+    got = opt.zero_moment_spec(P("data", "model"), (2560, 9728), mesh)
+    assert got == P("data", "model")
+    # nothing divisible: unchanged
+    got = opt.zero_moment_spec(P(), (7,), mesh)
+    assert got == P()
+
+
+# -------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.float32) * 3}}
+    path = ckpt.save(str(tmp_path / "step_1"), tree, step=7)
+    restored, meta = ckpt.restore(path, tree)
+    assert meta["step"] == 7
+    assert restored["a"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(restored["a"], np.float32),
+                                  np.asarray(tree["a"], np.float32))
+    assert ckpt.latest(str(tmp_path)) == path

@@ -1,0 +1,79 @@
+"""Cluster simulator invariants + policy ordering (Fig. 8 semantics)."""
+import numpy as np
+import pytest
+
+from repro.core.simulator import ClusterSim, SimJob, run_policy_comparison
+from repro.core.traces import (PAPER_TABLE2, PhaseProfile, bubble_ratio,
+                               paper_table2_trace, synthetic_job_mix)
+
+
+def test_table2_bubble_ratios_match_paper():
+    assert bubble_ratio(PAPER_TABLE2["7B"]) == pytest.approx(0.8010, abs=2e-3)
+    assert bubble_ratio(PAPER_TABLE2["30B"]) == pytest.approx(0.7067, abs=2e-3)
+    assert bubble_ratio(PAPER_TABLE2["235B"]) == pytest.approx(0.8111, abs=2e-3)
+
+
+def test_paper_trace_segments_cover_active_phases():
+    tr = paper_table2_trace("7B")
+    total_active = sum(d for _, d in tr.segments)
+    e = PAPER_TABLE2["7B"]
+    assert total_active == pytest.approx(
+        e["compute_log_prob"] + e["update_actor"] + e["sync_weight"])
+    assert tr.duty() == pytest.approx(1 - bubble_ratio(e), abs=1e-6)
+
+
+def _profiles(n=12, seed=0):
+    return synthetic_job_mix(n, seed=seed)
+
+
+def test_simulation_conservation():
+    """Every job completes all its phases; busy time == sum of durations."""
+    profs = _profiles(6)
+    jobs = [SimJob(f"j{i}", p, 4, arrival=float(i * 50))
+            for i, p in enumerate(profs)]
+    sim = ClusterSim(total_nodes=32, group_size=8, policy="spread_backfill")
+    res = sim.run(jobs)
+    for j in res.jobs:
+        assert j.t_done >= j.arrival
+        assert j.step_idx == 4
+        total = sum(sum(c.values()) for c in j.cycles)
+        elapsed = j.t_done - j.arrival
+        assert elapsed >= total - 1e-6          # can't run faster than ideal
+        # busy split matches the cycle anatomy
+        shared = sum(c["compute_log_prob"] + c["update_actor"]
+                     + c["sync_weight"] for c in j.cycles)
+        assert j.busy_shared >= shared - 1e-6
+
+
+def test_isolated_has_heavier_tail_than_shared():
+    res = run_policy_comparison(_profiles(20, seed=7), steps=6,
+                                arrival_rate=1 / 120.0, seed=7)
+    iso = np.percentile(res["isolated"].norm_delays(), 90)
+    packed = np.percentile(res["pack"].norm_delays(), 90)
+    sb = np.percentile(res["spread_backfill"].norm_delays(), 90)
+    assert sb <= iso + 1e-9
+    assert packed <= iso + 1e-9
+
+
+def test_shared_policies_reduce_makespan():
+    res = run_policy_comparison(_profiles(20, seed=3), steps=6,
+                                arrival_rate=1 / 120.0, seed=3)
+    assert res["spread_backfill"].makespan <= res["isolated"].makespan
+    assert res["pack"].makespan <= res["isolated"].makespan
+
+
+def test_backfill_no_worse_than_spread():
+    res = run_policy_comparison(_profiles(24, seed=5), steps=6,
+                                arrival_rate=1 / 60.0, seed=5,
+                                policies=("spread", "spread_backfill"))
+    assert (res["spread_backfill"].makespan
+            <= res["spread"].makespan + 1e-6)
+
+
+def test_switch_cost_charged():
+    profs = _profiles(4, seed=1)
+    jobs = [SimJob(f"j{i}", p, 3, arrival=0.0) for i, p in enumerate(profs)]
+    sim = ClusterSim(total_nodes=8, group_size=8, policy="pack",
+                     switch_cost=5.0)
+    res = sim.run(jobs)
+    assert sum(j.switch_overhead for j in res.jobs) > 0.0

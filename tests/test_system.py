@@ -1,0 +1,152 @@
+"""End-to-end system behaviour: the full PlexRL stack (Router + HRRS
+executor + StateManager + WPGs + RLController) running real model execution
+on CPU, including context switching, fault tolerance, and migration."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.cluster import PlexCluster
+from repro.core.controller import JobConfig
+from repro.core.state_manager import Tier
+
+TINY = (("num_layers", 2), ("d_model", 32), ("num_heads", 4),
+        ("num_kv_heads", 2), ("head_dim", 8), ("d_ff", 64),
+        ("vocab_size", 64), ("tie_embeddings", True))
+
+
+def _job(job_id, seed, steps=2):
+    return JobConfig(job_id=job_id, model_name="qwen2-0.5b", steps=steps,
+                     batch_size=4, group_size=2, max_new_tokens=4,
+                     seq_len=24, overrides=TINY, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    c = PlexCluster(n_groups=1)
+    c.add_job(_job("jobA", 1))
+    c.add_job(_job("jobB", 2))
+    c.run(interleave=True)
+    return c
+
+
+def test_two_jobs_complete_all_steps(cluster):
+    for job in ("jobA", "jobB"):
+        ctl = cluster.controllers[job]
+        assert len(ctl.metrics_log) == ctl.cfg.steps
+        assert len(ctl.reward_log) == ctl.cfg.steps
+        for m in ctl.metrics_log:
+            assert not np.isnan(m["loss"])
+
+
+def test_multiplexing_context_switches_happened(cluster):
+    # two jobs share one group: the router must have swapped state
+    assert cluster.router.executor.switch_count >= 1
+    assert len(cluster.router.switch_log) >= 1
+    ev = cluster.router.switch_log[-1]
+    assert ev["t_offload"] >= 0.0 and ev["t_load"] >= 0.0
+
+
+def test_per_wpg_serial_order(cluster):
+    # executor never ran two ops on one group concurrently: the group lock's
+    # holder is empty after drain and all tasks are COMPLETED
+    from repro.core.scheduler.executor import State
+    assert all(t.state == State.COMPLETED
+               for t in cluster.router.executor.tasks.values())
+    for lock in cluster.router.executor.locks.values():
+        assert lock.holder is None
+
+
+def test_billing_attributes_busy_time(cluster):
+    for job, rec in cluster.billing.items():
+        assert rec.busy_seconds > 0.0
+        assert rec.steps == 2
+        assert rec.gpu_seconds_per_step() > 0.0
+
+
+def test_hrrs_setup_estimates_fed_back(cluster):
+    # after switches, HRRS setup costs reflect measured bandwidths
+    assert cluster.router.executor.t_load >= 0.0
+    sm = cluster.router.state_managers[0]
+    assert sm.job_bytes("jobA:jobA-train") > 0
+
+
+def test_checkpoint_failure_restore(tmp_path):
+    c = PlexCluster(n_groups=1)
+    c.add_job(_job("jobC", 3, steps=1))
+    c.run()
+    paths = c.checkpoint_all(str(tmp_path))
+    before = c.router.wpgs["jobC-train"].params()
+    lost = c.fail_node(0)
+    assert lost, "failure should drop device state"
+    c.restore_all(paths)
+    after = c.router.wpgs["jobC-train"].params()
+    np.testing.assert_array_equal(
+        np.asarray(before["ln_f"]["scale"], np.float32),
+        np.asarray(after["ln_f"]["scale"], np.float32))
+
+
+def test_migration_between_groups():
+    c = PlexCluster(n_groups=2)
+    c.add_job(_job("jobD", 4, steps=1), group_id=0)
+    c.run()
+    moved = c.migrate_job("jobD", 0, 1)
+    assert moved > 0
+    wpg = c.router.wpgs["jobD-train"]
+    assert c.router.group_of["jobD-train"] == 1
+    params = wpg.params()           # gatherable from the new node
+    assert params["embed"]["embedding"].shape[0] == 64
+
+
+def test_weight_sync_between_deployments():
+    c = PlexCluster(n_groups=1)
+    ctl = c.add_job(_job("jobE", 5, steps=1))
+    c.run()
+    # create a rollout deployment and sync trained weights into it
+    spec = api.DeploymentSpec(deployment_id="jobE-rollout", job_id="jobE",
+                              model_name="qwen2-0.5b", role="rollout",
+                              overrides=TINY)
+    rollout_wpg = c.router.create_deployment(spec, group_id=0)
+    train_wpg = c.router.wpgs["jobE-train"]
+    res = train_wpg._op_sync_weights(rollout_wpg)
+    assert res["synced_bytes"] > 0
+    a = train_wpg.params()["embed"]["embedding"]
+    b = rollout_wpg.params()["embed"]["embedding"]
+    np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                  np.asarray(b, np.float32))
+
+
+def test_host_optimizer_offload_path():
+    """ZeRO-offload: grads computed on device, optimizer step on host state."""
+    import jax
+    from repro.configs import ShapeSpec
+    c = PlexCluster(n_groups=1)
+    c.add_job(_job("jobF", 6, steps=1))
+    c.run()
+    wpg = c.router.wpgs["jobF-train"]
+    batch = wpg.model.dummy_batch(jax.random.PRNGKey(0),
+                                  ShapeSpec("t", "train", 16, 4))
+    out = wpg._op_forward_backward(batch)
+    before = np.asarray(wpg.params()["ln_f"]["scale"], np.float32).copy()
+    res = wpg._op_optim_step(out["grads"], host=True)
+    # the step counter is shared with the device optimizer's canonical
+    # `opt/step` entry: the job already took one device step in c.run()
+    assert res["host"] and res["step"] >= 1
+    after = np.asarray(wpg.params()["ln_f"]["scale"], np.float32)
+    assert not np.array_equal(before, after)
+
+
+def test_async_one_step_staleness():
+    """§6.3: rollout k+1 may start before update k completes; sync enforced
+    via prerequisites. All steps must still complete and train."""
+    cfg = JobConfig(job_id="jobAsync", model_name="qwen2-0.5b", steps=3,
+                    batch_size=4, group_size=2, max_new_tokens=4, seq_len=24,
+                    overrides=TINY, seed=9, async_staleness=1)
+    c = PlexCluster(n_groups=1)
+    c.add_job(cfg)
+    c.run()
+    ctl = c.controllers["jobAsync"]
+    assert len(ctl.metrics_log) == 3
+    assert len(ctl.reward_log) == 3
+    for m in ctl.metrics_log:
+        assert not np.isnan(m["loss"])
