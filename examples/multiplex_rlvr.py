@@ -1,13 +1,20 @@
-"""Two RLVR jobs multiplexed on one shared pool — the paper's core claim,
+"""Two RLVR jobs multiplexed on a shared pool — the paper's core claim,
 executed for real on this machine.
 
-Runs the same two jobs twice:
-  (a) isolated   — jobs run back-to-back on the pool (job-local reservation)
+Part 1 (one group, HRRS mechanism): the same two jobs run
+  (a) isolated   — back-to-back on the pool (job-local reservation)
   (b) multiplexed— PlexRL interleaves them with HRRS + StateManager swaps
+and compares wall-clock + billed GPU-seconds per step.
 
-and compares wall-clock + billed GPU-seconds per step. Because each job's
-rollout phase leaves the "training pool" idle, multiplexing reclaims those
-bubbles (paper Fig. 7: up to 37.58 % GPU-hour reduction at scale).
+Part 2 (two groups, concurrent dispatch plane): the same two jobs, one per
+node group, run
+  (c) serial     — the serial driver executes every admitted op inline,
+                   so job A's rollout blocks job B's training functions
+  (d) concurrent — Router.run_until_idle dispatches each group on its own
+                   worker thread; job A's rollout overlaps job B's
+                   update_actor in measured wall-clock time (XLA releases
+                   the GIL while executing, so the overlap is real even on
+                   this CPU container).
 
 Run:  PYTHONPATH=src python examples/multiplex_rlvr.py
 """
@@ -34,36 +41,54 @@ def make_jobs():
     ]
 
 
-def run(interleave: bool):
-    cluster = PlexCluster(n_groups=1)
-    for cfg in make_jobs():
-        cluster.add_job(cfg)
+def run(interleave: bool, n_groups: int = 1, concurrent: bool = False):
+    cluster = PlexCluster(n_groups=n_groups)
+    for g, cfg in enumerate(make_jobs()):
+        cluster.add_job(cfg, group_id=g % n_groups)
     t0 = time.time()
-    billing = cluster.run(interleave=interleave)
+    billing = cluster.run(interleave=interleave, concurrent=concurrent)
     wall = time.time() - t0
     return cluster, billing, wall
 
 
 def main():
-    print("=== isolated (back-to-back) ===")
+    print("=== Part 1: one shared group (HRRS multiplexing) ===")
+    print("--- isolated (back-to-back) ---")
     c1, b1, w1 = run(interleave=False)
     print(f"wall {w1:.1f}s; switches={len(c1.router.switch_log)}")
 
-    print("=== PlexRL multiplexed ===")
+    print("--- PlexRL multiplexed ---")
     c2, b2, w2 = run(interleave=True)
     print(f"wall {w2:.1f}s; switches={len(c2.router.switch_log)}")
 
     for job in ("alpha", "beta"):
-        print(f"{job}: billed gpu_s/step isolated={b1[job].gpu_seconds_per_step():.2f} "
+        print(f"{job}: billed gpu_s/step isolated="
+              f"{b1[job].gpu_seconds_per_step():.2f} "
               f"multiplexed={b2[job].gpu_seconds_per_step():.2f} "
               f"(switch overhead {b2[job].switch_seconds:.3f}s)")
         r = c2.controllers[job].reward_log
         print(f"{job}: rewards {np.round(r, 3).tolist()}")
-    print("\nNOTE: on one CPU there is no idle-bubble to reclaim (every op is"
-          "\ncompute-bound), so the win here is the MECHANISM demonstration:"
-          "\nHRRS-batched context switches, measured setup costs, per-job"
-          "\nbilling. The capacity gain at cluster scale is quantified by"
-          "\nbenchmarks/fig8_policies.py (1.8x) and fig7_cost.py (31-38 %).")
+
+    print("\n=== Part 2: two groups (concurrent dispatch plane) ===")
+    print("--- serial driver (ops execute inline, no overlap) ---")
+    _, _, w3 = run(interleave=True, n_groups=2, concurrent=False)
+    print(f"wall {w3:.1f}s")
+
+    print("--- concurrent driver (one dispatch thread per group) ---")
+    _, _, w4 = run(interleave=True, n_groups=2, concurrent=True)
+    print(f"wall {w4:.1f}s -> serial/concurrent ratio "
+          f"{w3 / max(w4, 1e-9):.2f}x")
+
+    print("\nNOTE: on one CPU every op is compute-bound and XLA already"
+          "\nsaturates all cores, so neither HRRS (Part 1) nor cross-group"
+          "\noverlap (Part 2) can reclaim idle time HERE — both parts are"
+          "\nMECHANISM demonstrations: HRRS-batched context switches,"
+          "\nmeasured setup costs, per-job billing, and group dispatch on"
+          "\nindependent worker threads. tests/test_dispatch.py pins the"
+          "\noverlap guarantee (<0.9x serial wall-clock on two groups) with"
+          "\nGIL-releasing ops; the capacity gain at cluster scale is"
+          "\nquantified by benchmarks/fig8_policies.py (1.8x) and"
+          "\nfig7_cost.py (31-38 %).")
 
 
 if __name__ == "__main__":

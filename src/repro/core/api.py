@@ -9,7 +9,8 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
-from typing import Any, Callable, Dict, Optional, Tuple
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 class Op(enum.Enum):
@@ -36,31 +37,79 @@ class DeploymentSpec:
     overrides: Tuple[Tuple[str, Any], ...] = ()     # ModelConfig.replace kwargs
 
 
-class Future:
-    """Minimal future for the non-blocking control plane (§5.2.2)."""
+class _CallbackList:
+    """Back-compat shim: ``future.callbacks.append(cb)`` must stay race-safe
+    now that operations complete on dispatch worker threads, so appends are
+    routed through :meth:`Future.add_done_callback`."""
 
-    __slots__ = ("_done", "_result", "_error", "callbacks")
+    __slots__ = ("_future",)
+
+    def __init__(self, future: "Future"):
+        self._future = future
+
+    def append(self, cb: Callable[["Future"], None]):
+        self._future.add_done_callback(cb)
+
+
+class Future:
+    """Thread-safe future for the non-blocking control plane (§5.2.2).
+
+    Completion is signalled through a condition variable so any thread can
+    block in :meth:`wait`; callbacks are fired OUTSIDE the internal lock
+    because a callback may submit follow-up operations that resolve further
+    futures (possibly on other dispatch threads).
+    """
+
+    __slots__ = ("_cond", "_done", "_result", "_error", "_callbacks",
+                 "callbacks")
 
     def __init__(self):
+        self._cond = threading.Condition()
         self._done = False
         self._result = None
         self._error: Optional[BaseException] = None
-        self.callbacks = []
+        self._callbacks: List[Callable[["Future"], None]] = []
+        self.callbacks = _CallbackList(self)
+
+    # ------------------------------------------------------------ resolve
+    def _resolve(self, result, error: Optional[BaseException]):
+        with self._cond:
+            if self._done:
+                raise RuntimeError("future already resolved")
+            self._result = result
+            self._error = error
+            self._done = True
+            cbs, self._callbacks = self._callbacks, []
+            self._cond.notify_all()
+        for cb in cbs:
+            cb(self)
 
     def set_result(self, value):
-        self._done = True
-        self._result = value
-        for cb in self.callbacks:
-            cb(self)
+        self._resolve(value, None)
 
     def set_error(self, err: BaseException):
-        self._done = True
-        self._error = err
-        for cb in self.callbacks:
-            cb(self)
+        self._resolve(None, err)
+
+    # ------------------------------------------------------------ observe
+    def add_done_callback(self, cb: Callable[["Future"], None]):
+        """Register ``cb(future)``; fires immediately if already resolved."""
+        with self._cond:
+            if not self._done:
+                self._callbacks.append(cb)
+                return
+        cb(self)
 
     def done(self) -> bool:
         return self._done
+
+    def wait(self, timeout: Optional[float] = None):
+        """Block until resolved, then return :meth:`result` (re-raising the
+        operation's error). Raises ``TimeoutError`` if ``timeout`` elapses."""
+        with self._cond:
+            if not self._cond.wait_for(lambda: self._done, timeout):
+                raise TimeoutError(
+                    f"operation did not complete within {timeout}s")
+        return self.result()
 
     def result(self):
         if not self._done:

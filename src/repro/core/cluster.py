@@ -10,10 +10,7 @@ checkpoint/restart and migration.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional
-
-import numpy as np
 
 from repro.core import api
 from repro.core.controller import JobConfig, RLControllerGRPO
@@ -37,6 +34,10 @@ class PlexCluster:
         self.router = Router(policy=policy)
         self.controllers: Dict[str, RLControllerGRPO] = {}
         self.billing: Dict[str, BillingRecord] = {}
+        # incremental billing cursors: exec-log offset per deployment and
+        # consumed prefix of the router's switch log
+        self._billed_ops: Dict[str, int] = {}
+        self._billed_switches = 0
         for g in range(n_groups):
             self.router.state_managers[g] = StateManager(node_id=f"group{g}")
 
@@ -48,63 +49,68 @@ class PlexCluster:
         return ctl
 
     # -------------------------------------------------------------- run
-    def run(self, interleave: bool = True) -> Dict[str, BillingRecord]:
+    def run(self, interleave: bool = True,
+            concurrent: bool = False) -> Dict[str, BillingRecord]:
         """Run every job to completion under shared scheduling.
 
         With ``interleave`` the controllers submit steps round-robin so the
         HRRS queue actually multiplexes; without it jobs run back-to-back
-        (the 'isolated' baseline on the same hardware).
+        (the 'isolated' baseline on the same hardware). With ``concurrent``
+        the router's event-driven dispatch plane executes different node
+        groups on parallel worker threads (``run_until_idle``), so jobs
+        placed on different groups genuinely overlap in wall-clock time;
+        otherwise the serial driver (``drain``) is used.
         """
+        def drive():
+            if concurrent:
+                self.router.run_until_idle()
+            else:
+                self.router.drain()
+            self._bill_from_logs()
+
         for ctl in self.controllers.values():
             ctl.submit_init()
-        self.router.drain()
+        drive()
 
         remaining = {j: c.cfg.steps for j, c in self.controllers.items()}
         order = list(self.controllers)
         while any(v > 0 for v in remaining.values()):
-            submitted = []
             for job_id in order:
                 if remaining[job_id] <= 0:
                     continue
-                ctl = self.controllers[job_id]
-                t0 = time.monotonic()
-                ctl.submit_step()
-                if not interleave:
-                    self.router.drain()
-                    self._bill(job_id, time.monotonic() - t0)
+                self.controllers[job_id].submit_step()
                 remaining[job_id] -= 1
-                submitted.append(job_id)
+                if not interleave:
+                    drive()
             if interleave:
-                t0 = time.monotonic()
-                self.router.drain()
-                dt = time.monotonic() - t0
-                for job_id in submitted:  # attribute by executed ops below
-                    pass
-                self._bill_from_logs()
-        self._bill_from_logs()
+                drive()
+        drive()
         for job_id, ctl in self.controllers.items():
             self.billing[job_id].steps = ctl.cfg.steps
         return self.billing
 
-    def _bill(self, job_id: str, seconds: float):
-        self.billing[job_id].busy_seconds += seconds
-
     def _bill_from_logs(self):
         """Attribute measured execution time per job from WPG exec logs and
         switch overheads from the router's switch log (unified provisioning:
-        §7.2 — users pay for the computation they consume)."""
+        §7.2 — users pay for the computation they consume).
+
+        Incremental: only log entries beyond each cursor are consumed, and
+        busy time ACCUMULATES across a job's deployments (a job with split
+        train/rollout WPGs is billed for both, where the previous version
+        kept only whichever deployment iterated last)."""
         for dep_id, wpg in self.router.wpgs.items():
             rec = self.billing.get(wpg.spec.job_id)
             if rec is None:
                 continue
-            rec.busy_seconds = sum(dt for _, dt in wpg.exec_log)
-        for ev in self.router.switch_log:
+            start = self._billed_ops.get(dep_id, 0)
+            new = wpg.exec_log[start:]
+            self._billed_ops[dep_id] = start + len(new)
+            rec.busy_seconds += sum(dt for _, dt in new)
+        for ev in self.router.switch_log[self._billed_switches:]:
             rec = self.billing.get(ev["to_job"])
             if rec is not None:
-                rec.switch_seconds = sum(
-                    e["t_offload"] + e["t_load"]
-                    for e in self.router.switch_log
-                    if e["to_job"] == ev["to_job"])
+                rec.switch_seconds += ev["t_offload"] + ev["t_load"]
+        self._billed_switches = len(self.router.switch_log)
 
     # --------------------------------------------------- fault tolerance
     def fail_node(self, group_id: int):

@@ -99,17 +99,22 @@ class RLControllerGRPO:
 
         def on_gen(fut: api.Future):
             import jax.numpy as jnp
+            # a failed generate raises here; the Router records it and the
+            # driver (drain / run_until_idle) re-raises at exit, so a lost
+            # step is loud rather than silently skipped
             batch = self._pack(prompts, answers, fut.result())
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             upd = api.make_op(self.train_dep, api.Op.UPDATE_ACTOR, batch,
                               exec_estimate=train_estimate,
                               prerequisites=(gen.req_id,))
-            upd_f = self.router.submit_queued_operation(upd)
             self._update_reqs[step_idx] = upd.req_id
-            upd_f.callbacks.append(
+            upd_f = self.router.submit_queued_operation(upd)
+            upd_f.add_done_callback(
                 lambda f: self.metrics_log.append(f.result()))
 
-        gen_f.callbacks.append(on_gen)
+        # add_done_callback fires immediately if the generate already
+        # completed on a dispatch thread — safe under concurrent execution
+        gen_f.add_done_callback(on_gen)
         self._step_idx += 1
         return [gen_f]
 

@@ -6,12 +6,34 @@ owns deployment lifecycle (create / init / teardown) and the automatic
 context-switch logic (§5.2.2 ``_handle_job_transition``): when an admitted
 operation targets a different job than the one resident on the target group,
 offload+load operations are prepended transparently.
+
+Dispatch plane
+--------------
+Two drivers share ONE admission path (HRRS scoring + lock-gated start in
+``TaskExecutor``):
+
+- :meth:`run_until_idle` — the concurrent, event-driven plane: one worker
+  thread per node group blocks on the executor's condition variable, admits
+  the group's next operation the moment the group frees up, and executes it
+  while other groups run their own operations in parallel (per-group
+  ordering is preserved by the exclusive ``GroupLock``; per-WPG execution
+  stays serial). This is what lets job A's rollout overlap job B's training
+  functions — the multiplexing the paper's §5.1/§5.2 design exists for.
+- :meth:`step` / :meth:`drain` — the serial analogue on the same admission
+  path, used for the back-to-back baseline and for deterministic replay
+  under a :class:`~repro.core.scheduler.executor.VirtualClock`.
+
+Failure propagation: an operation that raises resolves its future with the
+error, and any queued operation whose prerequisite FAILED is itself failed
+("poisoned") instead of waiting forever, so both drivers always terminate.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
+import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import api
 from repro.core.scheduler import hrrs
@@ -19,12 +41,15 @@ from repro.core.scheduler.executor import State, Task, TaskExecutor
 from repro.core.state_manager import StateManager, Tier
 from repro.core.worker import WorkerProcessGroup
 
+logger = logging.getLogger(__name__)
+
 
 class Router:
     def __init__(self, now: Callable[[], float] = time.monotonic,
-                 policy: str = "hrrs"):
+                 policy: str = "hrrs",
+                 wpg_factory: Callable[..., object] = WorkerProcessGroup):
         self.now = now
-        self.wpgs: Dict[str, WorkerProcessGroup] = {}
+        self.wpgs: Dict[str, object] = {}
         self.deployments: Dict[str, api.DeploymentSpec] = {}
         self.group_of: Dict[str, int] = {}       # deployment -> node group
         self.state_managers: Dict[int, StateManager] = {}
@@ -32,15 +57,18 @@ class Router:
         self.request_queues: Dict[str, List[api.QueuedOperation]] = {}
         self.pending: Dict[int, api.QueuedOperation] = {}
         self.switch_log: List[dict] = []
+        self.wpg_factory = wpg_factory
+        # exceptions raised by user callbacks during future resolution; a
+        # broken callback must not kill a dispatch thread mid-protocol
+        self.callback_errors: List[Tuple[int, BaseException]] = []
 
     # ----------------------------------------------------------- lifecycle
     def create_deployment(self, spec: api.DeploymentSpec, group_id: int = 0,
-                          state_manager: Optional[StateManager] = None
-                          ) -> WorkerProcessGroup:
+                          state_manager: Optional[StateManager] = None):
         sm = state_manager or self.state_managers.setdefault(
             group_id, StateManager(node_id=f"group{group_id}"))
         self.state_managers[group_id] = sm
-        wpg = WorkerProcessGroup(spec, sm)
+        wpg = self.wpg_factory(spec, sm)
         self.wpgs[spec.deployment_id] = wpg
         self.deployments[spec.deployment_id] = spec
         self.group_of[spec.deployment_id] = group_id
@@ -56,15 +84,21 @@ class Router:
 
     # -------------------------------------------------------------- submit
     def submit_queued_operation(self, qop: api.QueuedOperation) -> api.Future:
-        """Non-blocking API handler (§5.2.2): wrap + enqueue, return at once."""
-        qop.arrival_time = self.now()
-        self.request_queues[qop.job_id].append(qop)
-        req = hrrs.Request(req_id=qop.req_id, job_id=qop.job_id,
-                           op=qop.op.value, exec_time=qop.exec_estimate,
-                           arrival_time=qop.arrival_time, payload=qop)
-        group = self.group_of[qop.deployment_id]
-        self.executor.submit(req, group, prerequisites=qop.prerequisites)
-        self.pending[qop.req_id] = qop
+        """Non-blocking API handler (§5.2.2): wrap + enqueue, return at once.
+
+        Thread-safe: future callbacks submit follow-up operations from
+        dispatch worker threads while the controller submits from its own.
+        """
+        with self.executor.cv:
+            qop.arrival_time = self.now()
+            self.request_queues.setdefault(qop.job_id, []).append(qop)
+            req = hrrs.Request(req_id=qop.req_id, job_id=qop.job_id,
+                               op=qop.op.value, exec_time=qop.exec_estimate,
+                               arrival_time=qop.arrival_time, payload=qop)
+            group = self.group_of[qop.deployment_id]
+            self.executor.submit(req, group,
+                                 prerequisites=qop.prerequisites)
+            self.pending[qop.req_id] = qop
         return qop.future
 
     # ------------------------------------------------------------ dispatch
@@ -82,41 +116,146 @@ class Router:
             t_off += self.wpgs[dep].offload(Tier.HOST)
         t_load = target_wpg.ensure_resident()
         if resident or t_load > 0:
-            self.switch_log.append({
-                "t": self.now(), "group": group_id, "to_job": qop.job_id,
-                "t_offload": t_off, "t_load": t_load})
-        # feed measured setup costs back into HRRS
+            with self.executor.cv:
+                self.switch_log.append({
+                    "t": self.now(), "group": group_id, "to_job": qop.job_id,
+                    "t_offload": t_off, "t_load": t_load})
+        # feed measured setup costs back into HRRS (per group: concurrent
+        # groups switch independently)
         nbytes = sm.job_bytes(target_wpg.job_prefix)
-        self.executor.t_load = sm.load_time_estimate(nbytes)
-        self.executor.t_offload = sm.offload_time_estimate(nbytes)
+        self.executor.set_setup_costs(group_id,
+                                      sm.load_time_estimate(nbytes),
+                                      sm.offload_time_estimate(nbytes))
 
+    def _resolve_future(self, qop: api.QueuedOperation, result,
+                        err: Optional[BaseException]):
+        try:
+            if err is None:
+                qop.future.set_result(result)
+            else:
+                qop.future.set_error(err)
+        except Exception as cb_err:  # noqa: BLE001 - user callback bug
+            logger.warning("callback for op %d raised: %r",
+                           qop.req_id, cb_err)
+            self.callback_errors.append((qop.req_id, cb_err))
+
+    def _raise_callback_errors(self, since: int):
+        """Drivers fail loudly at exit if any user callback raised during
+        the call (matching the pre-concurrent serial loop, where a callback
+        exception propagated out of ``step``) — a broken callback means work
+        it was about to submit silently never ran."""
+        new = self.callback_errors[since:]
+        if new:
+            req_id, first = new[0]
+            raise RuntimeError(
+                f"{len(new)} future callback(s) raised during dispatch; "
+                f"first: op {req_id} -> {first!r}") from first
+
+    def _finalize(self, qop: api.QueuedOperation):
+        """Drop bookkeeping for a finished request (must hold executor.cv).
+
+        Popping ``pending`` here is what bounds memory over long runs — the
+        previous control loop only ever read it."""
+        self.pending.pop(qop.req_id, None)
+        queue = self.request_queues.get(qop.job_id)
+        if queue is not None:
+            self.request_queues[qop.job_id] = [
+                q for q in queue if q.req_id != qop.req_id]
+
+    def _reap_poisoned(self) -> List[Tuple[api.QueuedOperation, Exception]]:
+        """FAIL every queued task whose prerequisite FAILED (to fixpoint, so
+        chains of dependents collapse in one call). Returns the affected
+        (qop, error) pairs; callers fire the futures OUTSIDE the lock."""
+        out: List[Tuple[api.QueuedOperation, Exception]] = []
+        with self.executor.cv:
+            # fast path: the full-table scan below is only worth paying once
+            # some task has actually FAILED (dispatch calls this every loop)
+            if not self.executor.failed_count:
+                return out
+            changed = True
+            while changed:
+                changed = False
+                for t in list(self.executor.tasks.values()):
+                    if t.state != State.QUEUED:
+                        continue
+                    bad = self.executor.failed_prereqs(t)
+                    if not bad:
+                        continue
+                    cause = self.executor.tasks[bad[0]].error
+                    err = RuntimeError(
+                        f"prerequisite op {bad[0]} failed: {cause}")
+                    self.executor.finish(t, error=str(err))
+                    qop = self.pending.get(t.request.req_id)
+                    if qop is not None:
+                        self._finalize(qop)
+                        out.append((qop, err))
+                    changed = True
+        return out
+
+    def _reap_and_resolve(self) -> None:
+        """Reap poisoned tasks and fire their error callbacks under the
+        inflight guard: reaping decrements the open-task count under the
+        lock, but the error callbacks (which may resubmit work) fire outside
+        it — without the guard another dispatch worker could observe
+        ``outstanding == 0 and inflight == 0`` in that window, declare idle,
+        and exit before the callback's resubmission arrives."""
+        ex = self.executor
+        with ex.cv:
+            poisoned = self._reap_poisoned()
+            if not poisoned:
+                return
+            ex.inflight += 1
+        try:
+            for qop, err in poisoned:
+                self._resolve_future(qop, None, err)
+        finally:
+            with ex.cv:
+                ex.inflight -= 1
+                ex.cv.notify_all()
+
+    def _execute_admitted(self, group_id: int, task: Task) -> None:
+        """Run one admitted (RUNNING) operation to completion and resolve its
+        future. Shared by the serial driver and the per-group dispatch
+        threads; the future is resolved OUTSIDE the executor lock so
+        callbacks may submit follow-up operations."""
+        with self.executor.cv:
+            qop = self.pending[task.request.req_id]
+        result, err = None, None
+        try:
+            if qop.op not in (api.Op.INIT,):
+                self._handle_job_transition(group_id, qop)
+            result = self.wpgs[qop.deployment_id].execute(qop)
+        except Exception as e:  # noqa: BLE001 - surface via future
+            err = e
+        with self.executor.cv:
+            self.executor.finish(task, error=None if err is None
+                                 else str(err))
+            self._finalize(qop)
+        self._resolve_future(qop, result, err)
+
+    # ------------------------------------------------------ serial driver
     def step(self, max_ops: int = 1) -> int:
-        """Drive the control loop: admit + execute up to max_ops operations
-        (serially — the single-process analogue of concurrent WPGs)."""
+        """Serial driver on the shared admission path: admit + execute up to
+        ``max_ops`` operations inline (the back-to-back baseline, and the
+        deterministic path under a virtual clock)."""
+        err_start = len(self.callback_errors)
         executed = 0
         for _ in range(max_ops):
             progressed = False
             for group_id in sorted(set(self.group_of.values())):
-                task = self.executor.pick_next(group_id)
-                if task is None or not self.executor.try_start(task):
+                self._reap_and_resolve()
+                with self.executor.cv:
+                    task = self.executor.pick_next(group_id)
+                    started = (task is not None
+                               and self.executor.try_start(task))
+                if not started:
                     continue
-                qop = self.pending[task.request.req_id]
-                if qop.op not in (api.Op.INIT,):
-                    self._handle_job_transition(group_id, qop)
-                try:
-                    result = self.wpgs[qop.deployment_id].execute(qop)
-                    self.executor.finish(task, result=result)
-                    qop.future.set_result(result)
-                except Exception as e:  # noqa: BLE001 - surface via future
-                    self.executor.finish(task, error=str(e))
-                    qop.future.set_error(e)
-                self.request_queues[qop.job_id] = [
-                    q for q in self.request_queues[qop.job_id]
-                    if q.req_id != qop.req_id]
+                self._execute_admitted(group_id, task)
                 executed += 1
                 progressed = True
             if not progressed:
                 break
+        self._raise_callback_errors(err_start)
         return executed
 
     def drain(self, max_steps: int = 100_000) -> int:
@@ -127,3 +266,90 @@ class Router:
                 break
             total += n
         return total
+
+    # -------------------------------------------------- concurrent driver
+    def run_until_idle(self, timeout: Optional[float] = None) -> int:
+        """Event-driven concurrent dispatch: one worker thread per node
+        group. Each worker blocks on the executor's condition variable,
+        admits its group's next operation as soon as the group frees up
+        (per-WPG ordering preserved by the exclusive GroupLock), and runs it
+        while other groups execute concurrently. Returns once no operation
+        is queued, running, or firing callbacks.
+
+        ``timeout`` (wall-clock seconds) bounds the whole call; on expiry a
+        ``TimeoutError`` is raised with the stuck operations listed. A worker
+        blocked INSIDE ``wpg.execute`` cannot be interrupted — after a 1 s
+        grace it is abandoned as a daemon thread so the bound still holds.
+        """
+        groups = sorted(set(self.group_of.values()))
+        if not groups:
+            return 0
+        err_start = len(self.callback_errors)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        executed = [0] * len(groups)
+        timed_out = threading.Event()
+        ex = self.executor
+
+        def idle() -> bool:
+            # under ex.cv: nothing queued/running anywhere AND no worker is
+            # between finish() and its future's callbacks (which may submit)
+            return ex.outstanding() == 0 and ex.inflight == 0
+
+        def worker(slot: int, group_id: int):
+            while not timed_out.is_set():
+                self._reap_and_resolve()
+                with ex.cv:
+                    task = ex.pick_next(group_id)
+                    if task is not None and ex.try_start(task):
+                        ex.inflight += 1
+                    else:
+                        if idle():
+                            ex.cv.notify_all()
+                            return
+                        # timed wait: belt-and-braces against missed
+                        # notifications; re-checks poisoning + deadline
+                        ex.cv.wait(timeout=0.05)
+                        continue
+                try:
+                    self._execute_admitted(group_id, task)
+                    executed[slot] += 1
+                finally:
+                    with ex.cv:
+                        ex.inflight -= 1
+                        ex.cv.notify_all()
+                if deadline is not None and time.monotonic() > deadline:
+                    timed_out.set()
+                    with ex.cv:
+                        ex.cv.notify_all()
+
+        threads = [threading.Thread(target=worker, args=(i, g),
+                                    name=f"dispatch-g{g}", daemon=True)
+                   for i, g in enumerate(groups)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            while t.is_alive():
+                t.join(timeout=0.1)
+                if (deadline is not None and time.monotonic() > deadline
+                        and not timed_out.is_set()):
+                    timed_out.set()
+                    with ex.cv:
+                        ex.cv.notify_all()
+                if timed_out.is_set() and (
+                        time.monotonic() > (deadline or 0.0) + 1.0):
+                    # grace expired: a worker is stuck INSIDE wpg.execute
+                    # (threads cannot be killed) — abandon it (daemon) so the
+                    # timeout still bounds this call, and report below
+                    break
+        if timed_out.is_set():
+            with ex.cv:
+                stuck = [t.request.req_id for t in ex.tasks.values()
+                         if t.state in (State.QUEUED, State.RUNNING)]
+            # the deadline may have lapsed while the LAST op was finishing;
+            # only a run that left work behind is an actual timeout
+            if stuck:
+                raise TimeoutError(
+                    f"run_until_idle exceeded {timeout}s; "
+                    f"stuck ops: {stuck}")
+        self._raise_callback_errors(err_start)
+        return sum(executed)

@@ -8,8 +8,13 @@ A lightweight finite state machine per job/request with three mechanics:
   after prerequisites finish and the exclusive node-group lock is acquired.
 - Lifecycle Teardown (COMPLETED): releases locks and unblocks successors.
 
-The executor is time-source agnostic: a callable ``now()`` lets it run under
-both the discrete-event simulator and wall-clock execution.
+The executor is time-source agnostic: a callable ``now()`` lets the SAME
+admission path run under wall-clock dispatch (concurrent WPG worker
+threads), the discrete-event simulator, or a :class:`VirtualClock` for
+deterministic replay. All state transitions are guarded by one re-entrant
+mutex whose condition variable (``cv``) doubles as the dispatch-plane wakeup
+signal: submissions and completions notify it, so per-group dispatchers
+block instead of polling.
 """
 from __future__ import annotations
 
@@ -37,8 +42,35 @@ class Task:
     t_admitted: float = 0.0
     t_started: float = 0.0
     t_finished: float = 0.0
-    result: object = None
     error: Optional[str] = None
+
+
+class VirtualClock:
+    """Deterministic, manually-advanced time source.
+
+    Drop-in for ``time.monotonic`` wherever a ``now()`` callable is taken
+    (Router, TaskExecutor, simulator), so HRRS admission decisions — which
+    depend on waits computed from ``now() - arrival_time`` — replay
+    identically across runs regardless of host load.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+        self._lock = threading.Lock()
+
+    def now(self) -> float:
+        with self._lock:
+            return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"virtual clock cannot go backwards ({dt})")
+        with self._lock:
+            self._t += dt
+            return self._t
+
+    def __call__(self) -> float:
+        return self.now()
 
 
 class GroupLock:
@@ -67,21 +99,40 @@ class TaskExecutor:
         self.now = now
         self.t_load = t_load
         self.t_offload = t_offload
+        # admission fallbacks for groups with no measured switch yet; the
+        # scalar attributes above drift to "most recently measured anywhere"
+        # (telemetry) and must NOT leak into another group's scoring
+        self._default_t_load = t_load
+        self._default_t_offload = t_offload
         self.policy = policy
         self.tasks: Dict[int, Task] = {}
         self.locks: Dict[int, GroupLock] = {}
         self.resident_job: Dict[int, Optional[str]] = {}
         self.switch_count = 0
+        # Per-group measured setup costs (concurrent groups switch
+        # independently; a global scalar would race across dispatch threads).
+        self.group_t_load: Dict[int, float] = {}
+        self.group_t_offload: Dict[int, float] = {}
+        # One mutex guards every transition; its condition variable is the
+        # dispatch-plane wakeup: submit/finish notify, dispatchers wait.
+        self.cv = threading.Condition(threading.RLock())
+        self.inflight = 0              # ops started but futures not yet fired
+        self._open = 0                 # tasks in QUEUED or RUNNING
+        self.failed_count = 0          # lifetime FAILED transitions
 
     # ------------------------------------------------------------- submit
     def submit(self, request: hrrs.Request, group_id: int,
                prerequisites: Sequence[int] = ()) -> Task:
-        t = Task(request=request, group_id=group_id,
-                 prerequisites=tuple(prerequisites), t_admitted=self.now())
-        self.tasks[request.req_id] = t
-        self.locks.setdefault(group_id, GroupLock())
-        self.resident_job.setdefault(group_id, None)
-        return t
+        with self.cv:
+            t = Task(request=request, group_id=group_id,
+                     prerequisites=tuple(prerequisites),
+                     t_admitted=self.now())
+            self.tasks[request.req_id] = t
+            self.locks.setdefault(group_id, GroupLock())
+            self.resident_job.setdefault(group_id, None)
+            self._open += 1
+            self.cv.notify_all()
+            return t
 
     # ---------------------------------------------------------- admission
     def _ready(self, t: Task) -> bool:
@@ -89,51 +140,88 @@ class TaskExecutor:
             self.tasks[p].state == State.COMPLETED
             for p in t.prerequisites if p in self.tasks)
 
+    def failed_prereqs(self, t: Task) -> List[int]:
+        return [p for p in t.prerequisites
+                if p in self.tasks and self.tasks[p].state == State.FAILED]
+
     def runnable(self, group_id: int) -> List[Task]:
-        return [t for t in self.tasks.values()
-                if t.group_id == group_id and self._ready(t)]
+        with self.cv:
+            return [t for t in self.tasks.values()
+                    if t.group_id == group_id and self._ready(t)]
+
+    def setup_costs(self, group_id: int) -> tuple:
+        return (self.group_t_load.get(group_id, self._default_t_load),
+                self.group_t_offload.get(group_id, self._default_t_offload))
+
+    def set_setup_costs(self, group_id: int, t_load: float, t_offload: float):
+        with self.cv:
+            self.group_t_load[group_id] = t_load
+            self.group_t_offload[group_id] = t_offload
+            # keep the scalar view as "most recently measured" for telemetry
+            self.t_load = t_load
+            self.t_offload = t_offload
 
     def pick_next(self, group_id: int) -> Optional[Task]:
         """HRRS-scored admission for one group. Does not start the task."""
-        cands = self.runnable(group_id)
-        if not cands:
-            return None
-        sched = hrrs.schedule if self.policy == "hrrs" else hrrs.fcfs_schedule
-        plan = sched(None, None, [t.request for t in cands], self.now(),
-                     self.resident_job[group_id], self.t_load, self.t_offload)
-        if not plan:
-            return None
-        first = plan[0].request
-        return self.tasks[first.req_id]
+        with self.cv:
+            cands = self.runnable(group_id)
+            if not cands:
+                return None
+            sched = (hrrs.schedule if self.policy == "hrrs"
+                     else hrrs.fcfs_schedule)
+            t_load, t_offload = self.setup_costs(group_id)
+            plan = sched(None, None, [t.request for t in cands], self.now(),
+                         self.resident_job[group_id], t_load, t_offload)
+            if not plan:
+                return None
+            first = plan[0].request
+            return self.tasks[first.req_id]
 
     # -------------------------------------------------------------- start
     def try_start(self, task: Task) -> bool:
-        """Lock-gated QUEUED -> RUNNING transition. Returns switch-occurred
-        via ``task.request.payload``-agnostic bookkeeping."""
-        if not self._ready(task):
-            return False
-        lock = self.locks[task.group_id]
-        if not lock.acquire(task.request.req_id):
-            return False
-        if self.resident_job[task.group_id] not in (None, task.request.job_id):
-            self.switch_count += 1
-        self.resident_job[task.group_id] = task.request.job_id
-        task.state = State.RUNNING
-        task.t_started = self.now()
-        task.request.running = True
-        task.request.remaining_time = task.request.exec_time
-        return True
+        """Lock-gated QUEUED -> RUNNING transition."""
+        with self.cv:
+            if not self._ready(task):
+                return False
+            lock = self.locks[task.group_id]
+            if not lock.acquire(task.request.req_id):
+                return False
+            if self.resident_job[task.group_id] not in (None,
+                                                        task.request.job_id):
+                self.switch_count += 1
+            self.resident_job[task.group_id] = task.request.job_id
+            task.state = State.RUNNING
+            task.t_started = self.now()
+            task.request.running = True
+            task.request.remaining_time = task.request.exec_time
+            return True
 
     # ------------------------------------------------------------- finish
-    def finish(self, task: Task, result=None, error: Optional[str] = None):
-        task.state = State.FAILED if error else State.COMPLETED
-        task.error = error
-        task.result = result
-        task.t_finished = self.now()
-        task.request.running = False
-        self.locks[task.group_id].release(task.request.req_id)
+    def finish(self, task: Task, error: Optional[str] = None):
+        with self.cv:
+            was_open = task.state in (State.QUEUED, State.RUNNING)
+            task.state = State.FAILED if error else State.COMPLETED
+            task.error = error
+            task.t_finished = self.now()
+            task.request.running = False
+            # The Task record is kept for telemetry (states, timings), but
+            # the operation payload (args may hold whole rollout batches) is
+            # only reachable through the future from here on — retaining it
+            # would grow memory without bound over long runs.
+            task.request.payload = None
+            self.locks[task.group_id].release(task.request.req_id)
+            if was_open:
+                self._open -= 1
+            if error:
+                self.failed_count += 1
+            self.cv.notify_all()
 
     # ------------------------------------------------------------ queries
+    def outstanding(self) -> int:
+        """Tasks still QUEUED or RUNNING (idle when 0 and inflight == 0)."""
+        with self.cv:
+            return self._open
+
     def wait_time(self, task: Task) -> float:
         start = task.t_started if task.t_started else self.now()
         return max(0.0, start - task.t_admitted)

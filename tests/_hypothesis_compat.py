@@ -1,0 +1,117 @@
+"""Vendored property-test shim used ONLY when `hypothesis` is absent.
+
+Provides the tiny slice of the hypothesis API this suite uses — ``given``,
+``settings`` and the ``strategies`` namespace — backed by seeded
+``numpy.random`` draws so runs are deterministic (the per-test seed is
+derived from the test function's qualified name). No shrinking, no
+database: on failure the falsifying draw is printed and the original
+exception re-raised.
+
+Import pattern in test modules::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+from typing import Callable, Sequence
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw: Callable):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class _Data:
+    """Interactive draws inside the test body (``st.data()``)."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy):
+        return strategy.draw(self._rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        # hypothesis bounds are inclusive on both ends
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(elements: Sequence) -> _Strategy:
+        pool = list(elements)
+        return _Strategy(lambda rng: pool[int(rng.integers(0, len(pool)))])
+
+    @staticmethod
+    def tuples(*elems: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in elems))
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def data() -> _Strategy:
+        return _Strategy(lambda rng: _Data(rng))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator: stores the example budget on the ``given``-wrapped test."""
+    def deco(fn):
+        fn._hc_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hc_max_examples", _DEFAULT_MAX_EXAMPLES)
+            base = int.from_bytes(
+                hashlib.sha256(fn.__qualname__.encode()).digest()[:4], "big")
+            for i in range(n):
+                rng = np.random.default_rng(base + i)
+                drawn = [s.draw(rng) for s in strats]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception:
+                    print(f"Falsifying example ({fn.__name__}, "
+                          f"example {i}): {drawn!r}")
+                    raise
+
+        # hide the drawn parameters from pytest's fixture resolution (the
+        # real hypothesis rewrites the signature the same way)
+        wrapper.__signature__ = inspect.Signature()
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -1,7 +1,10 @@
 """Scheduler data structures + policies: unit and hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # vendored fallback (seeded numpy)
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.scheduler import hrrs
 from repro.core.scheduler.intervals import IntervalSet
