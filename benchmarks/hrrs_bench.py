@@ -1,7 +1,9 @@
 """Scheduler microbenchmarks: HRRS vs FCFS on mixed queues, the §5.2
 data-structure costs (segment-tree gang check, interval-set fitting) in
-microseconds per call, and the dispatch plane's concurrency gain + per-op
-control overhead (serial driver vs Router.run_until_idle).
+microseconds per call, deep-queue per-admission cost of the incremental
+admission index vs Algorithm 1's full re-score, and the dispatch plane's
+concurrency gain + per-op control overhead (serial driver vs
+Router.run_until_idle).
 """
 from __future__ import annotations
 
@@ -12,6 +14,7 @@ import numpy as np
 from repro.core import api
 from repro.core.router import Router
 from repro.core.scheduler import hrrs
+from repro.core.scheduler.executor import TaskExecutor, VirtualClock
 from repro.core.scheduler.intervals import IntervalSet
 from repro.core.scheduler.ring import CapacityRing
 
@@ -90,6 +93,41 @@ def _time_us(fn, iters=200) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _admission_us(n_queued: int, n_jobs: int, use_index: bool,
+                  seed: int = 0) -> float:
+    """Per-admission cost of ``n_queued`` ops through the executor's
+    submit + pick/start/finish cycle on one group: the dispatch plane's hot
+    path. Submissions are INSIDE the timed region so the indexed path is
+    charged for its O(log n) insert maintenance, not just the pick."""
+    clock = VirtualClock()
+    ex = TaskExecutor(now=clock, policy="hrrs",
+                      use_admission_index=use_index)
+    rng = np.random.default_rng(seed)
+    reqs = [hrrs.Request(req_id=i + 1, job_id=f"job{i % n_jobs}",
+                         op="update_actor",
+                         exec_time=float(rng.uniform(0.5, 8.0)),
+                         arrival_time=0.0)
+            for i in range(n_queued)]
+    gaps = [float(rng.uniform(0.0, 0.2)) for _ in range(n_queued)]
+    admitted = 0
+    t0 = time.perf_counter()
+    for r, gap in zip(reqs, gaps):
+        r.arrival_time = clock.now()
+        ex.submit(r, group_id=0)
+        clock.advance(gap)
+    while True:
+        task = ex.pick_next(0)
+        if task is None:
+            break
+        ex.try_start(task)
+        ex.finish(task)
+        clock.advance(0.05)
+        admitted += 1
+    dt = time.perf_counter() - t0
+    assert admitted == n_queued
+    return dt / n_queued * 1e6
+
+
 def run() -> list[tuple[str, float, str]]:
     rows = []
     # HRRS vs FCFS: switches on a comparable-service-time queue — the regime
@@ -134,6 +172,16 @@ def run() -> list[tuple[str, float, str]]:
     segs = [(5.0, 20.0), (130.0, 25.0), (410.0, 30.0)]
     us = _time_us(lambda: iv.simulate_insert(segs, shift=3.0), iters=5_000)
     rows.append(("intervals/simulate_insert_us", us, "O(N log M)"))
+
+    # deep-queue admission: incremental index vs Algorithm 1 full re-score,
+    # multiple jobs multiplexed per group (the §4.4 control-plane hot path)
+    for n in (64, 256, 1024):
+        full_us = _admission_us(n, n_jobs=4, use_index=False)
+        idx_us = _admission_us(n, n_jobs=4, use_index=True)
+        rows.append((f"admission/full_rescore_n{n}_us", full_us,
+                     "per admission, 4 jobs/group"))
+        rows.append((f"admission/indexed_n{n}_us", idx_us,
+                     f"speedup={full_us / max(idx_us, 1e-9):.1f}x"))
 
     # dispatch plane: cross-group overlap (4 groups x 6 x 10ms ops) and the
     # per-op control overhead of the concurrent driver on zero-cost ops

@@ -296,19 +296,28 @@ class Router:
             return ex.outstanding() == 0 and ex.inflight == 0
 
         def worker(slot: int, group_id: int):
+            # Fully signal-driven: the ONLY blocking point is an untimed
+            # wait on the executor's condition variable. Every state change
+            # that could unblock a worker notifies it — submit, finish,
+            # inflight decrement, idle detection, and the shutdown token
+            # (timed_out) — so an idle dispatcher performs zero wakeups
+            # between submissions (PR 1 used a 50 ms guard timeout here).
             while not timed_out.is_set():
                 self._reap_and_resolve()
+                task = None
                 with ex.cv:
-                    task = ex.pick_next(group_id)
-                    if task is not None and ex.try_start(task):
+                    t = ex.pick_next(group_id)
+                    if t is not None and ex.try_start(t):
                         ex.inflight += 1
+                        task = t
+                    elif idle():
+                        ex.cv.notify_all()
+                        return
                     else:
-                        if idle():
-                            ex.cv.notify_all()
-                            return
-                        # timed wait: belt-and-braces against missed
-                        # notifications; re-checks poisoning + deadline
-                        ex.cv.wait(timeout=0.05)
+                        ex.cv.wait()
+                        # woken by a notification: re-run the reap (the
+                        # wakeup may have been a FAILED finish) and re-check
+                        # shutdown/idle/admission from the loop top
                         continue
                 try:
                     self._execute_admitted(group_id, task)
@@ -322,6 +331,11 @@ class Router:
                     with ex.cv:
                         ex.cv.notify_all()
 
+        def signal_shutdown():
+            timed_out.set()
+            with ex.cv:
+                ex.cv.notify_all()
+
         threads = [threading.Thread(target=worker, args=(i, g),
                                     name=f"dispatch-g{g}", daemon=True)
                    for i, g in enumerate(groups)]
@@ -329,18 +343,23 @@ class Router:
             t.start()
         for t in threads:
             while t.is_alive():
-                t.join(timeout=0.1)
-                if (deadline is not None and time.monotonic() > deadline
-                        and not timed_out.is_set()):
-                    timed_out.set()
-                    with ex.cv:
-                        ex.cv.notify_all()
-                if timed_out.is_set() and (
-                        time.monotonic() > (deadline or 0.0) + 1.0):
-                    # grace expired: a worker is stuck INSIDE wpg.execute
-                    # (threads cannot be killed) — abandon it (daemon) so the
-                    # timeout still bounds this call, and report below
-                    break
+                if deadline is None:
+                    t.join()
+                    continue
+                remaining = deadline - time.monotonic()
+                if remaining > 0 and not timed_out.is_set():
+                    # sleep exactly until the deadline (or thread exit) —
+                    # workers park on the cv and need no supervision
+                    t.join(timeout=remaining)
+                    continue
+                if not timed_out.is_set():
+                    signal_shutdown()
+                # shutdown signalled: workers parked on the cv exit
+                # immediately; one stuck INSIDE wpg.execute (threads cannot
+                # be killed) gets a 1 s grace, then is abandoned (daemon) so
+                # the timeout still bounds this call — reported below
+                t.join(timeout=max(0.0, deadline + 1.0 - time.monotonic()))
+                break
         if timed_out.is_set():
             with ex.cv:
                 stuck = [t.request.req_id for t in ex.tasks.values()

@@ -1,2 +1,3 @@
 """Cluster scheduler: cyclic horizon, hierarchical resource view, placement
-(Eq. 1-2), HRRS runtime ordering (Alg. 1), task-executor FSM."""
+(Eq. 1-2), HRRS runtime ordering (Alg. 1) with an incremental
+kinetic-tournament admission index, task-executor FSM."""

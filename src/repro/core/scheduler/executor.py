@@ -2,8 +2,14 @@
 
 A lightweight finite state machine per job/request with three mechanics:
 
-- Priority-based Admission (QUEUED): the pending pool is continuously
-  re-scored with HRRS against current resource availability.
+- Priority-based Admission (QUEUED): the pending pool is scored with HRRS
+  against current resource availability. The default ``hrrs`` policy keeps
+  the pool in an incremental kinetic-tournament index
+  (:mod:`~repro.core.scheduler.admission_index`) updated on submit /
+  finish / start / setup-recalibration, so ``pick_next`` is amortised
+  O(log n) instead of a full O(n log n) re-score; ``pick_next_full`` is the
+  unchanged Algorithm-1 oracle the index is property-tested against (and
+  the path non-``hrrs`` policies use).
 - Lock-Gated Execution (RUNNING): a request transitions to RUNNING only
   after prerequisites finish and the exclusive node-group lock is acquired.
 - Lifecycle Teardown (COMPLETED): releases locks and unblocks successors.
@@ -24,6 +30,7 @@ import threading
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.scheduler import hrrs
+from repro.core.scheduler.admission_index import GroupAdmissionIndex
 
 
 class State(enum.Enum):
@@ -95,7 +102,7 @@ class GroupLock:
 class TaskExecutor:
     def __init__(self, now: Callable[[], float],
                  t_load: float = 0.0, t_offload: float = 0.0,
-                 policy: str = "hrrs"):
+                 policy: str = "hrrs", use_admission_index: bool = True):
         self.now = now
         self.t_load = t_load
         self.t_offload = t_offload
@@ -119,6 +126,32 @@ class TaskExecutor:
         self.inflight = 0              # ops started but futures not yet fired
         self._open = 0                 # tasks in QUEUED or RUNNING
         self.failed_count = 0          # lifetime FAILED transitions
+        # Incremental admission index (hrrs policy only): membership is
+        # exactly the runnable set — ready QUEUED tasks — maintained on
+        # submit / finish / try_start instead of re-derived per admission.
+        self.use_admission_index = use_admission_index and policy == "hrrs"
+        self._indexes: Dict[int, GroupAdmissionIndex] = {}
+        # prereq req_id -> dependents whose readiness flips when it settles
+        self._dependents: Dict[int, List[int]] = {}
+
+    # -------------------------------------------------------------- index
+    def _index_for(self, group_id: int) -> GroupAdmissionIndex:
+        idx = self._indexes.get(group_id)
+        if idx is None:
+            t_load, t_offload = self.setup_costs(group_id)
+            idx = self._indexes[group_id] = GroupAdmissionIndex(t_load,
+                                                                t_offload)
+        return idx
+
+    def _index_insert(self, task: Task):
+        r = task.request
+        self._index_for(task.group_id).insert(
+            r.req_id, r.job_id, r.arrival_time, r.exec_time, self.now())
+
+    def _index_remove(self, task: Task):
+        idx = self._indexes.get(task.group_id)
+        if idx is not None:
+            idx.remove(task.request.req_id, self.now())
 
     # ------------------------------------------------------------- submit
     def submit(self, request: hrrs.Request, group_id: int,
@@ -131,6 +164,24 @@ class TaskExecutor:
             self.locks.setdefault(group_id, GroupLock())
             self.resident_job.setdefault(group_id, None)
             self._open += 1
+            if self.use_admission_index:
+                for p in t.prerequisites:
+                    pt = self.tasks.get(p)
+                    if pt is None or pt.state in (State.QUEUED,
+                                                  State.RUNNING):
+                        self._dependents.setdefault(p, []).append(
+                            request.req_id)
+                if self._ready(t):
+                    self._index_insert(t)
+                # a task counted "ready" only because this req_id was an
+                # unknown prerequisite is no longer ready now that the
+                # prerequisite exists and is QUEUED (matches _ready, which
+                # ignores prereq ids it has never seen)
+                for d in self._dependents.get(request.req_id, ()):
+                    dt = self.tasks.get(d)
+                    if (dt is not None and dt.state == State.QUEUED
+                            and not self._ready(dt)):
+                        self._index_remove(dt)
             self.cv.notify_all()
             return t
 
@@ -160,9 +211,28 @@ class TaskExecutor:
             # keep the scalar view as "most recently measured" for telemetry
             self.t_load = t_load
             self.t_offload = t_offload
+            idx = self._indexes.get(group_id)
+            if idx is not None:
+                idx.set_setup_costs(t_load, t_offload)
 
     def pick_next(self, group_id: int) -> Optional[Task]:
-        """HRRS-scored admission for one group. Does not start the task."""
+        """Scored admission for one group. Does not start the task.
+
+        ``hrrs`` policy: O(log n) read of the incremental index — provably
+        (property-tested) the same pick as :meth:`pick_next_full`. Other
+        policies fall through to the full plan."""
+        with self.cv:
+            if not self.use_admission_index:
+                return self.pick_next_full(group_id)
+            idx = self._indexes.get(group_id)
+            if idx is None or not len(idx):
+                return None
+            req_id = idx.pick(self.now(), self.resident_job.get(group_id))
+            return None if req_id is None else self.tasks[req_id]
+
+    def pick_next_full(self, group_id: int) -> Optional[Task]:
+        """Algorithm 1's full re-score over the runnable pool: the reference
+        admission path (and the oracle the index is tested against)."""
         with self.cv:
             cands = self.runnable(group_id)
             if not cands:
@@ -194,6 +264,8 @@ class TaskExecutor:
             task.t_started = self.now()
             task.request.running = True
             task.request.remaining_time = task.request.exec_time
+            if self.use_admission_index:
+                self._index_remove(task)
             return True
 
     # ------------------------------------------------------------- finish
@@ -214,6 +286,28 @@ class TaskExecutor:
                 self._open -= 1
             if error:
                 self.failed_count += 1
+            if self.use_admission_index:
+                # poisoned-while-QUEUED tasks may still be indexed
+                self._index_remove(task)
+                deps = self._dependents.pop(task.request.req_id, None)
+                if deps and not error:
+                    for d in deps:
+                        dt = self.tasks.get(d)
+                        if (dt is not None and dt.state == State.QUEUED
+                                and self._ready(dt)):
+                            self._index_insert(dt)
+                # scrub this task's own registrations under still-pending
+                # prereqs (incl. forward-referenced ids that never arrived)
+                # so _dependents stays bounded by open tasks
+                for p in task.prerequisites:
+                    waiters = self._dependents.get(p)
+                    if waiters is not None:
+                        try:
+                            waiters.remove(task.request.req_id)
+                        except ValueError:
+                            pass
+                        if not waiters:
+                            del self._dependents[p]
             self.cv.notify_all()
 
     # ------------------------------------------------------------ queries

@@ -8,6 +8,14 @@ which batches same-deployment requests to amortise offload/load cycles while
 ageing prevents starvation. ``schedule`` is the faithful Algorithm 1:
 score all requests (running + queued + new), sort by score, then replay them
 onto a cursor timeline, prepending offload+load whenever the job changes.
+
+Scoring is side-effect free: ``queued_score``/``score_request`` are pure
+functions of (request, now, resident job, setup cost), and ``schedule`` no
+longer writes ``Request.score`` — so the incremental admission index
+(``admission_index.py``) and this full-re-score oracle can score the SAME
+request pool without interfering with each other. ``Request.score`` is kept
+as an informational field for callers that want to stash a score, but nothing
+in this module reads or writes it.
 """
 from __future__ import annotations
 
@@ -25,7 +33,8 @@ class Request:
     remaining_time: float = 0.0  # for the running request
     running: bool = False
     payload: object = None       # opaque: closure / simulated work descriptor
-    score: float = 0.0
+    score: float = 0.0           # informational scratch only; scoring is pure
+                                 # (schedule never reads or writes this)
 
 
 @dataclasses.dataclass
@@ -41,6 +50,33 @@ def hrrs_score(wait: float, exec_time: float, switch: bool,
     s = exec_time + (setup_cost if switch else 0.0)
     s = max(s, 1e-9)
     return (wait + s) / s
+
+
+def queued_score(exec_time: float, arrival_time: float, now: float,
+                 switch: bool, setup: float) -> float:
+    """Pure P_i(t) for a queued request: the one scoring formula shared by
+    Algorithm 1's full re-score and the incremental admission index (both
+    must produce bit-identical floats for the equivalence guarantee)."""
+    return hrrs_score(max(0.0, now - arrival_time), exec_time, switch, setup)
+
+
+def score_request(r: Request, now: float, current_job: Optional[str],
+                  setup: float) -> float:
+    """Pure Algorithm-1 score for ``r`` (does NOT mutate ``r``)."""
+    if r.running:
+        return queued_score(r.remaining_time, r.arrival_time, now,
+                            switch=False, setup=0.0)
+    return queued_score(r.exec_time, r.arrival_time, now,
+                        switch=r.job_id != current_job, setup=setup)
+
+
+def sort_key(r: Request, now: float, current_job: Optional[str],
+             setup: float) -> Tuple[float, float, int]:
+    """Algorithm 1's total admission order (highest score first; ties by
+    arrival, then req_id). Exported so the admission index can break
+    cross-bucket ties with the exact same key."""
+    return (-score_request(r, now, current_job, setup),
+            r.arrival_time, r.req_id)
 
 
 def schedule(new_request: Optional[Request],
@@ -59,17 +95,7 @@ def schedule(new_request: Optional[Request],
     omega.extend(queued)
 
     setup = t_load + t_offload
-    for r in omega:
-        wait = max(0.0, now - r.arrival_time)
-        if r.running:
-            t_req = r.remaining_time
-            switch = False
-        else:
-            switch = r.job_id != current_job
-            t_req = r.exec_time + (setup if switch else 0.0)
-        r.score = (wait + max(t_req, 1e-9)) / max(t_req, 1e-9)
-
-    omega.sort(key=lambda r: (-r.score, r.arrival_time, r.req_id))
+    omega.sort(key=lambda r: sort_key(r, now, current_job, setup))
 
     plan: List[Assignment] = []
     cursor = now

@@ -1,0 +1,320 @@
+"""Equivalence suite for the incremental HRRS admission index.
+
+The contract under test (ISSUE 2 tentpole): at EVERY admission point, the
+kinetic-tournament index (``TaskExecutor.pick_next``) returns the exact same
+next request as Algorithm 1's full re-score (``TaskExecutor.pick_next_full``
+over the runnable pool) — including under score ties, prerequisite chains,
+failures, setup-cost recalibration, resident-job (switch-bit) changes, and
+``VirtualClock`` jumps that cross score-crossing boundaries.
+
+Randomisation goes through the ``hypothesis``/``_hypothesis_compat`` shim so
+the suite runs (deterministically) with or without hypothesis installed.
+"""
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.scheduler import hrrs
+from repro.core.scheduler.admission_index import (GroupAdmissionIndex,
+                                                  KineticTournament)
+from repro.core.scheduler.executor import State, TaskExecutor, VirtualClock
+
+
+# --------------------------------------------------------------- helpers
+def _brute_pick(entries, t, switch, setup):
+    """Reference argmax with Algorithm 1's exact key over raw entries."""
+    if not entries:
+        return None
+    best = min(entries, key=lambda e: (
+        -hrrs.queued_score(e[3], e[2], t, switch, setup), e[2], e[0]))
+    return best[0]
+
+
+def _oracle_req(ex, group_id):
+    task = ex.pick_next_full(group_id)
+    return None if task is None else task.request.req_id
+
+
+def _indexed_req(ex, group_id):
+    task = ex.pick_next(group_id)
+    return None if task is None else task.request.req_id
+
+
+def _assert_equiv(ex, groups, ctx):
+    for g in groups:
+        want = _oracle_req(ex, g)
+        got = _indexed_req(ex, g)
+        assert got == want, (f"group {g}: index picked {got}, "
+                             f"Algorithm 1 picked {want} ({ctx})")
+
+
+# ------------------------------------------- kinetic tournament vs brute
+def test_tournament_winner_flips_at_crossing():
+    """Deterministic crossing geometry: a steep latecomer overtakes the
+    incumbent once its line crosses; the certificate must fire."""
+    kt = KineticTournament(switch=False, setup=0.0)
+    kt.insert(1, "a", arrival=0.0, exec_time=1.0, t=0.0)      # steep
+    kt.insert(2, "a", arrival=0.0, exec_time=100.0, t=0.0)    # shallow
+    # same arrival: the steeper line wins for all t > 0 (t=0 ties -> req 1)
+    assert kt.peek(0.0).req_id == 1
+    assert kt.peek(50.0).req_id == 1
+
+    kt2 = KineticTournament(switch=False, setup=0.0)
+    kt2.insert(1, "a", arrival=0.0, exec_time=10.0, t=0.0)
+    kt2.insert(2, "a", arrival=40.0, exec_time=1.0, t=0.0)
+    # before req 2 arrives, req 1 leads; then 1 + t/10 vs 1 + (t - 40)
+    # cross at t = 400/9 ~ 44.44 and req 2 leads forever
+    assert kt2.peek(30.0).req_id == 1
+    assert kt2.peek(44.0).req_id == 1
+    assert kt2.peek(45.0).req_id == 2
+    assert kt2.peek(1000.0).req_id == 2
+
+
+@settings(max_examples=40)
+@given(st.data())
+def test_tournament_matches_brute_force(data):
+    """Random insert/remove/advance mix: the tournament's peek equals a
+    brute-force argmax at every probe time, with heavy ties (integer grids)
+    and multiplicative time jumps."""
+    switch = data.draw(st.booleans())
+    setup = data.draw(st.sampled_from([0.0, 1.0, 7.5]))
+    kt = KineticTournament(switch=switch, setup=setup)
+    live = {}
+    t = 0.0
+    next_id = 1
+    for _ in range(data.draw(st.integers(min_value=10, max_value=60))):
+        action = data.draw(st.sampled_from(
+            ["insert", "insert", "insert", "remove", "jump", "crawl"]))
+        if action == "insert":
+            arrival = t - float(data.draw(st.integers(0, 8)))
+            exec_time = float(data.draw(st.sampled_from(
+                [0.5, 1.0, 1.0, 2.0, 4.0, 16.0])))
+            kt.insert(next_id, "a", arrival, exec_time, t)
+            live[next_id] = (next_id, "a", arrival, exec_time)
+            next_id += 1
+        elif action == "remove" and live:
+            victim = data.draw(st.sampled_from(sorted(live)))
+            kt.remove(victim, t)
+            del live[victim]
+        elif action == "jump":
+            t += float(data.draw(st.floats(0.0, 1000.0)))
+        else:
+            t += float(data.draw(st.floats(0.0, 0.5)))
+        got = kt.peek(t)
+        want = _brute_pick(list(live.values()), t, switch, setup)
+        assert (got.req_id if got else None) == want, (t, sorted(live))
+
+
+# ----------------------------------------- executor-level property test
+@settings(max_examples=30)
+@given(st.data())
+def test_index_equals_algorithm1_at_every_admission_point(data):
+    """Randomised workloads through the REAL wired path: submissions with
+    prereqs (incl. not-yet-submitted ones), starts/finishes/failures,
+    setup-cost recalibration, and VirtualClock jumps — after every event
+    the indexed pick must equal the full Algorithm-1 re-score, per group."""
+    clock = VirtualClock()
+    ex = TaskExecutor(now=clock, policy="hrrs")
+    n_groups = data.draw(st.integers(1, 2))
+    groups = list(range(n_groups))
+    jobs = [f"job{j}" for j in range(data.draw(st.integers(1, 4)))]
+    next_id = 1
+    running = {g: [] for g in groups}
+
+    for step in range(data.draw(st.integers(10, 50))):
+        action = data.draw(st.sampled_from(
+            ["submit", "submit", "submit", "start", "finish", "fail",
+             "advance", "big_jump", "recalibrate"]))
+        if action == "submit":
+            prereqs = ()
+            if data.draw(st.booleans()) and next_id > 1:
+                p = data.draw(st.integers(1, next_id - 1))
+                prereqs = (p,)
+            elif data.draw(st.booleans()):
+                # forward reference: prereq submitted later (or never) —
+                # _ready ignores unknown ids until they appear
+                prereqs = (next_id + data.draw(st.integers(1, 3)),)
+            # ties on purpose: exec times and wait offsets on small grids
+            exec_time = float(data.draw(st.sampled_from(
+                [0.5, 1.0, 1.0, 2.0, 2.0, 5.0])))
+            arrival = clock.now() - float(data.draw(st.integers(0, 4)))
+            g = data.draw(st.sampled_from(groups))
+            ex.submit(hrrs.Request(req_id=next_id,
+                                   job_id=data.draw(st.sampled_from(jobs)),
+                                   op="forward", exec_time=exec_time,
+                                   arrival_time=arrival),
+                      g, prerequisites=prereqs)
+            next_id += 1
+        elif action == "start":
+            g = data.draw(st.sampled_from(groups))
+            task = ex.pick_next(g)
+            assert (None if task is None else task.request.req_id) == \
+                _oracle_req(ex, g), f"step {step}: pre-start divergence"
+            if task is not None and ex.try_start(task):
+                running[g].append(task)
+        elif action in ("finish", "fail"):
+            g = data.draw(st.sampled_from(groups))
+            if running[g]:
+                task = running[g].pop(0)
+                ex.finish(task, error="injected" if action == "fail"
+                          else None)
+        elif action == "advance":
+            clock.advance(float(data.draw(st.floats(0.0, 2.0))))
+        elif action == "big_jump":
+            # cross score-crossing boundaries in one hop
+            clock.advance(float(data.draw(st.floats(50.0, 5000.0))))
+        else:
+            g = data.draw(st.sampled_from(groups))
+            ex.set_setup_costs(g, float(data.draw(st.floats(0.0, 10.0))),
+                               float(data.draw(st.floats(0.0, 10.0))))
+        _assert_equiv(ex, groups, f"step {step} after {action}")
+
+    # drain everything still runnable and keep checking on the way out
+    for g in groups:
+        for task in running[g]:
+            ex.finish(task)
+        while True:
+            _assert_equiv(ex, groups, "drain")
+            task = ex.pick_next(g)
+            if task is None or not ex.try_start(task):
+                break
+            ex.finish(task)
+            clock.advance(0.25)
+
+
+def test_time_jump_across_crossing_changes_pick_consistently():
+    """A deterministic boundary case: the pending pool's argmax flips when a
+    VirtualClock jump crosses the score-crossing point; index and oracle
+    must flip together (this is the kinetic certificate doing its job)."""
+    clock = VirtualClock()
+    ex = TaskExecutor(now=clock, policy="hrrs")
+    ex.submit(hrrs.Request(req_id=1, job_id="a", op="f", exec_time=10.0,
+                           arrival_time=0.0), 0)
+    ex.submit(hrrs.Request(req_id=2, job_id="a", op="f", exec_time=1.0,
+                           arrival_time=40.0), 0)
+    clock.advance(41.0)
+    # keep arrival <= now for req 2; crossing at t = 400/9 ~ 44.44
+    for t in (41.0, 44.0, 44.4, 44.5, 45.0, 1000.0):
+        if clock.now() < t:
+            clock.advance(t - clock.now())
+        assert _indexed_req(ex, 0) == _oracle_req(ex, 0), t
+    assert _indexed_req(ex, 0) == 2  # the steep latecomer overtook
+
+
+def test_switch_bit_changes_via_resident_job():
+    """Resident-job changes re-parameterise whole buckets (the switch bit);
+    the two-tournament design must track the oracle through a full
+    multi-job drain with nonzero setup costs."""
+    clock = VirtualClock()
+    ex = TaskExecutor(now=clock, t_load=3.0, t_offload=2.0, policy="hrrs")
+    ex.set_setup_costs(0, 3.0, 2.0)
+    for i in range(12):
+        ex.submit(hrrs.Request(req_id=i + 1, job_id=f"job{i % 3}", op="f",
+                               exec_time=1.0 + (i % 4),
+                               arrival_time=clock.now()), 0)
+        clock.advance(0.5)
+    order = []
+    while True:
+        assert _indexed_req(ex, 0) == _oracle_req(ex, 0)
+        task = ex.pick_next(0)
+        if task is None:
+            break
+        ex.try_start(task)   # flips resident_job -> switch bits
+        order.append(task.request.req_id)
+        ex.finish(task)
+        clock.advance(1.0)
+    assert sorted(order) == list(range(1, 13))
+
+
+def test_prereq_lifecycle_keeps_index_membership_exact():
+    """Index membership must mirror the runnable set through the full
+    prerequisite lifecycle: blocked on QUEUED, released by COMPLETED,
+    frozen by FAILED, and revoked when a forward-referenced prereq is
+    finally submitted."""
+    clock = VirtualClock()
+    ex = TaskExecutor(now=clock, policy="hrrs")
+
+    def req(i, job="a", e=1.0):
+        return hrrs.Request(req_id=i, job_id=job, op="f", exec_time=e,
+                            arrival_time=clock.now())
+
+    ex.submit(req(1), 0)
+    ex.submit(req(2), 0, prerequisites=(1,))       # blocked on QUEUED 1
+    assert _indexed_req(ex, 0) == _oracle_req(ex, 0) == 1
+    t1 = ex.pick_next(0)
+    ex.try_start(t1)
+    assert _indexed_req(ex, 0) == _oracle_req(ex, 0) is None
+    ex.finish(t1)                                  # releases 2
+    assert _indexed_req(ex, 0) == _oracle_req(ex, 0) == 2
+
+    ex.submit(req(3), 0, prerequisites=(99,))      # unknown prereq: ready
+    assert _indexed_req(ex, 0) == _oracle_req(ex, 0)
+    ex.submit(req(99, e=0.25), 0)                  # now known + QUEUED:
+    assert _indexed_req(ex, 0) == _oracle_req(ex, 0)   # 3 must drop out
+    # drain; a FAILED op freezes its dependents out of the index forever
+    ex.submit(req(4), 0)
+    t = ex.pick_next(0)
+    while t is not None:
+        ex.try_start(t)
+        err = "boom" if t.request.req_id == 99 else None
+        ex.finish(t, error=err)
+        assert _indexed_req(ex, 0) == _oracle_req(ex, 0)
+        clock.advance(0.5)
+        t = ex.pick_next(0)
+    # 3's prereq FAILED -> never admitted by either path
+    assert ex.tasks[3].state == State.QUEUED
+    assert _oracle_req(ex, 0) is None and _indexed_req(ex, 0) is None
+
+
+# ------------------------------------------------- scoring purity (hrrs)
+def test_schedule_is_side_effect_free():
+    """hrrs.schedule must not mutate its input Requests: the index and the
+    oracle score the same pool objects without interference."""
+    reqs = [hrrs.Request(req_id=i, job_id=f"j{i % 2}", op="f",
+                         exec_time=1.0 + i, arrival_time=float(i),
+                         score=123.456) for i in range(6)]
+    snapshots = [(r.score, r.arrival_time, r.exec_time, r.running,
+                  r.remaining_time) for r in reqs]
+    hrrs.schedule(None, None, reqs, now=50.0, current_job="j0",
+                  t_load=2.0, t_offload=1.0)
+    after = [(r.score, r.arrival_time, r.exec_time, r.running,
+              r.remaining_time) for r in reqs]
+    assert after == snapshots
+    # queued_score/score_request agree with the legacy formula
+    for r in reqs:
+        for cur in ("j0", "j1", None):
+            setup = 3.0
+            switch = r.job_id != cur
+            t_req = max(r.exec_time + (setup if switch else 0.0), 1e-9)
+            legacy = (max(0.0, 50.0 - r.arrival_time) + t_req) / t_req
+            assert hrrs.score_request(r, 50.0, cur, setup) == legacy
+
+
+def test_group_index_pick_empty_and_single():
+    idx = GroupAdmissionIndex()
+    assert idx.pick(0.0, None) is None
+    idx.insert(7, "job", 0.0, 1.0, 0.0)
+    assert idx.pick(1.0, None) == 7
+    assert idx.remove(7, 1.0)
+    assert not idx.remove(7, 1.0)
+    assert idx.pick(2.0, None) is None
+    assert len(idx) == 0
+
+
+def test_certificates_are_finite_or_inf():
+    """Degenerate geometry (identical lines, zero exec, huge arrivals) must
+    not produce NaN certificates."""
+    kt = KineticTournament(switch=True, setup=0.0)
+    kt.insert(1, "a", 0.0, 0.0, 0.0)      # exec 0 -> clamped 1e-9 slope
+    kt.insert(2, "a", 0.0, 0.0, 0.0)      # identical twin: pure tie-break
+    kt.insert(3, "a", 1e12, 1e-9, 0.0)    # far-future arrival kink
+    for t in (0.0, 1.0, 1e6, 1e12, 2e12):
+        e = kt.peek(t)
+        assert e is not None
+        assert all(not math.isnan(x) for x in kt.exp)
+    assert kt.peek(2e12).req_id in (1, 2, 3)

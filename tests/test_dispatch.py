@@ -297,6 +297,59 @@ def test_virtual_clock_advances_monotonically():
         clock.advance(-1.0)
 
 
+# ----------------------------------------------- signal-driven teardown
+def _count_cv_waits(executor):
+    """Instrument the executor's condition variable: record the timeout of
+    every wait() a dispatch worker performs."""
+    waits = []
+    orig_wait = executor.cv.wait
+
+    def counting_wait(timeout=None):
+        waits.append(timeout)
+        return orig_wait(timeout)
+
+    executor.cv.wait = counting_wait
+    return waits
+
+
+def test_idle_worker_parks_with_zero_polling_wakeups():
+    """An idle dispatcher must block on the cv with NO timeout and NO
+    periodic wakeups while another group's op runs (PR 1 polled every
+    50 ms here). Wakeups may only come from real notifications."""
+    r, specs, _ = make_router(n_groups=2, duration=0.4)
+    waits = _count_cv_waits(r.executor)
+    # only group 0 gets work; group 1's worker parks for the whole 0.4 s
+    r.submit_queued_operation(api.make_op(specs[0], api.Op.FORWARD, 0))
+    n = r.run_until_idle(timeout=30.0)
+    assert n == 1
+    # every wait was untimed (signal-driven), none was a 50 ms guard
+    assert waits, "expected the idle group's worker to park on the cv"
+    assert all(t is None for t in waits), waits
+    # a 0.4 s op under 50 ms polling would have produced ~8 wakeups per
+    # parked worker; signal-driven parking wakes only on notifications
+    assert len(waits) <= 4, waits
+
+
+def test_shutdown_token_wakes_parked_worker_promptly():
+    """With an op still RUNNING past the deadline, the shutdown token must
+    be notified through the cv: parked workers exit immediately and the
+    call returns within deadline + grace, well before the op finishes."""
+    r, specs, _ = make_router(n_groups=2, duration=2.0)
+    # group 0's op out-sleeps the deadline; group 1 parks with no work
+    r.submit_queued_operation(api.make_op(specs[0], api.Op.FORWARD, 0))
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError, match="stuck"):
+        r.run_until_idle(timeout=0.15)
+    elapsed = time.monotonic() - t0
+    # bounded by deadline (0.15) + 1 s abandon grace, NOT by the 2 s op
+    assert elapsed < 1.8, elapsed
+    # the parked (idle-group) worker was woken by the shutdown
+    # notification and exited; only the stuck executor thread may linger
+    lingering = [t for t in threading.enumerate()
+                 if t.name == "dispatch-g1" and t.is_alive()]
+    assert not lingering
+
+
 # ------------------------------------------------------- pending cleanup
 @pytest.mark.parametrize("driver", ["serial", "concurrent"])
 def test_pending_table_emptied_after_completion(driver):

@@ -1,0 +1,102 @@
+"""Stress/soak lane for the dispatch plane (``pytest -m slow``).
+
+Deep queues through the concurrent plane: 8 node groups x 200 zero-cost ops
+must drain through ``run_until_idle`` without leaking dispatcher threads and
+within a bounded wall clock (the incremental admission index keeps per-op
+control overhead flat at this depth), and the serial ``drain()`` replay of
+the same deep workload under a ``VirtualClock`` must produce a bit-identical
+admission order across two runs.
+
+Tier-1 (`python -m pytest -x -q`) deselects this module via the ``slow``
+marker registered in pytest.ini.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import api
+from repro.core.router import Router
+from repro.core.scheduler.executor import State, VirtualClock
+from test_dispatch import StubWPG, make_router, submit_batch
+
+pytestmark = pytest.mark.slow
+
+N_GROUPS = 8
+OPS_PER_GROUP = 200
+
+
+def _dispatcher_threads():
+    return [t for t in threading.enumerate()
+            if t.name.startswith("dispatch-") and t.is_alive()]
+
+
+def test_deep_queue_soak_no_leaked_dispatchers():
+    assert not _dispatcher_threads(), "stale dispatchers from another test"
+    r, specs, trace = make_router(n_groups=N_GROUPS, duration=0.0)
+    for s in specs:
+        submit_batch(r, s, OPS_PER_GROUP)
+    t0 = time.monotonic()
+    n = r.run_until_idle(timeout=120.0)
+    wall = time.monotonic() - t0
+    assert n == N_GROUPS * OPS_PER_GROUP
+    assert len(trace) == N_GROUPS * OPS_PER_GROUP
+    # bounded wall clock: deep queues must not regress to the full-rescore
+    # O(n^2) control plane (1600 zero-cost ops in well under a minute)
+    assert wall < 60.0, f"dispatch plane took {wall:.1f}s for {n} ops"
+    # teardown is complete by the time run_until_idle returns: every
+    # worker thread joined, no 50 ms stragglers
+    assert not _dispatcher_threads(), "leaked dispatcher threads"
+    assert not r.pending
+    assert all(t.state == State.COMPLETED
+               for t in r.executor.tasks.values())
+    assert all(lock.holder is None for lock in r.executor.locks.values())
+
+
+def test_repeated_soak_rounds_reuse_clean_plane():
+    """Back-to-back run_until_idle rounds on one Router: thread count must
+    not creep (each round tears down fully before returning)."""
+    r, specs, trace = make_router(n_groups=4, duration=0.0)
+    for round_no in range(3):
+        for s in specs:
+            submit_batch(r, s, 50)
+        n = r.run_until_idle(timeout=60.0)
+        assert n == 4 * 50, f"round {round_no}"
+        assert not _dispatcher_threads(), f"round {round_no} leaked"
+    assert len(trace) == 3 * 4 * 50
+
+
+def _virtual_deep_run():
+    """Serial drain of the deep workload under a VirtualClock; returns the
+    admission order as submission ordinals (req_ids differ across runs
+    because api.make_op's counter is global)."""
+    clock = VirtualClock()
+    trace = []
+    router = Router(now=clock,
+                    wpg_factory=lambda spec, sm: StubWPG(spec, sm, 0.0,
+                                                         trace))
+    specs = []
+    for g in range(N_GROUPS):
+        spec = api.DeploymentSpec(deployment_id=f"dep{g}",
+                                  job_id=f"job{g % 3}", model_name="stub",
+                                  role="train")
+        router.create_deployment(spec, group_id=g)
+        specs.append(spec)
+    ordinal = {}
+    for i in range(OPS_PER_GROUP):
+        for spec in specs:
+            qop = api.make_op(spec, api.Op.FORWARD, i,
+                              exec_estimate=0.5 + (i * 7 + 3) % 11)
+            router.submit_queued_operation(qop)
+            ordinal[qop.req_id] = len(ordinal)
+            clock.advance(0.125)     # exact in binary: no float drift
+    router.drain()
+    assert not router.pending
+    return [ordinal[req_id] for _, req_id, _, _ in trace]
+
+
+def test_serial_replay_bit_identical_admission_order():
+    first = _virtual_deep_run()
+    second = _virtual_deep_run()
+    assert len(first) == N_GROUPS * OPS_PER_GROUP
+    assert first == second, "virtual-clock replay diverged between runs"
