@@ -1,9 +1,10 @@
 """Scheduler microbenchmarks: HRRS vs FCFS on mixed queues, the §5.2
 data-structure costs (segment-tree gang check, interval-set fitting) in
 microseconds per call, deep-queue per-admission cost of the incremental
-admission index vs Algorithm 1's full re-score, and the dispatch plane's
+admission index vs Algorithm 1's full re-score, the dispatch plane's
 concurrency gain + per-op control overhead (serial driver vs
-Router.run_until_idle).
+Router.run_until_idle), and the serve-mode submit->admission latency on an
+idle persistent plane.
 """
 from __future__ import annotations
 
@@ -74,6 +75,25 @@ def _dispatch_wall(n_groups: int, ops_per_group: int, duration: float,
     else:
         router.drain()
     return time.perf_counter() - t0
+
+
+def _serve_attach_latency_us(iters: int = 300) -> float:
+    """submit -> admission latency on an IDLE serving plane: the parked
+    worker must wake on the submit notification and start the op. Measured
+    per op as ``t_started - t_submit`` (both on time.monotonic, the router's
+    clock), median over ``iters`` one-at-a-time submissions so each lands on
+    a fully idle plane."""
+    router, specs = _stub_router(1, 0.0)
+    lat = []
+    with router:                      # serve() ... shutdown()
+        for i in range(iters):
+            qop = api.make_op(specs[0], api.Op.FORWARD, i)
+            t0 = time.monotonic()
+            fut = router.submit_queued_operation(qop)
+            fut.wait(timeout=10.0)
+            lat.append(router.executor.tasks[qop.req_id].t_started - t0)
+            router.wait_idle(timeout=10.0)
+    return float(np.median(lat) * 1e6)
 
 
 def _mixed_queue(n: int, seed: int = 0, equal_exec: bool = False):
@@ -193,6 +213,11 @@ def run() -> list[tuple[str, float, str]]:
     w0 = _dispatch_wall(1, n_ops, 0.0, concurrent=True)
     rows.append(("dispatch/op_overhead_us", w0 / n_ops * 1e6,
                  "run_until_idle, zero-cost ops"))
+    # serve mode: submit -> admission latency against an idle persistent
+    # plane (the parked worker's wakeup path, pinned so regressions show)
+    rows.append(("dispatch/serve_attach_latency_us",
+                 _serve_attach_latency_us(),
+                 "median, idle serve() plane"))
     return rows
 
 

@@ -16,6 +16,15 @@ node group, run
                    the GIL while executing, so the overlap is real even on
                    this CPU container).
 
+Part 3 (serve mode, the paper's §4.1 regime): the plane runs PERSISTENTLY
+(`PlexCluster.serve()`), each job self-drives on its own client thread
+through the dataflow API (Deployment handles + `.then` chains — see
+core/controller.py for the straight-line GRPO and split-op PPO loops), and
+jobs ARRIVE and LEAVE against the live service: a GRPO job starts, a PPO
+job attaches mid-flight on a fresh node group (its dispatch worker spawns
+dynamically), a third job detaches with work still queued — queued ops
+cancel, in-flight ops resolve, and billing stays incremental throughout.
+
 Run:  PYTHONPATH=src python examples/multiplex_rlvr.py
 """
 import time
@@ -39,6 +48,20 @@ def make_jobs():
                   batch_size=8, group_size=4, max_new_tokens=6, seq_len=32,
                   overrides=TINY, seed=2),
     ]
+
+
+def wait_until(cluster, cond, timeout: float = 300.0):
+    """Poll a serve-mode condition, failing fast if a client thread died
+    (otherwise its error would only surface at serve() exit)."""
+    t0 = time.time()
+    while not cond():
+        if cluster.client_errors:
+            job, err = next(iter(cluster.client_errors.items()))
+            raise RuntimeError(f"job {job!r} client thread failed: "
+                               f"{err!r}") from err
+        if time.time() - t0 > timeout:
+            raise TimeoutError("serve-mode job made no progress")
+        time.sleep(0.05)
 
 
 def run(interleave: bool, n_groups: int = 1, concurrent: bool = False):
@@ -78,6 +101,36 @@ def main():
     _, _, w4 = run(interleave=True, n_groups=2, concurrent=True)
     print(f"wall {w4:.1f}s -> serial/concurrent ratio "
           f"{w3 / max(w4, 1e-9):.2f}x")
+
+    print("\n=== Part 3: serve mode (jobs attach/detach against a live "
+          "plane) ===")
+    jobs = make_jobs()
+    cluster = PlexCluster(n_groups=1)
+    cluster.add_job(jobs[0], group_id=0)              # GRPO, pre-registered
+    t0 = time.time()
+    with cluster.serve():
+        # wait for the first job to make progress, then attach a PPO job
+        # on a NEW group while the plane is live
+        wait_until(cluster,
+                   lambda: cluster.controllers["alpha"].reward_log)
+        cluster.add_job(jobs[1], group_id=1, algo="ppo")
+        # and a job that leaves early: detach cancels its queued ops,
+        # resolves its in-flight ones, and keeps its bill
+        doomed = JobConfig(job_id="gamma", model_name="qwen2-0.5b",
+                           steps=50, batch_size=8, group_size=4,
+                           max_new_tokens=6, seq_len=32, overrides=TINY,
+                           seed=3)
+        cluster.add_job(doomed, group_id=0)
+        wait_until(cluster,
+                   lambda: cluster.controllers["gamma"].steps_completed)
+        cluster.remove_job("gamma")
+        print("gamma detached after "
+              f"{cluster.controllers['gamma'].steps_completed} step(s)")
+    print(f"serve wall {time.time() - t0:.1f}s")
+    for job in ("alpha", "beta", "gamma"):
+        rec = cluster.billing[job]
+        print(f"{job}: steps={rec.steps} billed "
+              f"gpu_s/step={rec.gpu_seconds_per_step():.2f}")
 
     print("\nNOTE: on one CPU every op is compute-bound and XLA already"
           "\nsaturates all cores, so neither HRRS (Part 1) nor cross-group"

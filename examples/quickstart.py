@@ -1,8 +1,18 @@
-"""Quickstart: the PlexRL public API in ~60 lines.
+"""Quickstart: the PlexRL public API in ~80 lines.
 
 1. Build a model from the registry and run a GRPO train step directly.
 2. Stand the same thing up as a serviceized deployment behind the Router
-   and drive it with queued operations (the paper's §4.2 interface).
+   and program it through the dataflow client API (the paper's §4.2
+   interface): a bound ``Deployment`` handle whose methods return chainable
+   futures — ``.then(fn)`` interposes client-side transforms, and passing a
+   future as the next op's argument is the dependency edge (the scheduler
+   gates admission on it and splices the value in at dispatch).
+3. The same chain against a live ``serve()`` plane: submit from client
+   code while dispatch workers run persistently in the background.
+
+(`api.make_op` + `router.submit_queued_operation` remain underneath as the
+low-level escape hatch: explicit req_id prerequisites, custom arrival
+times. Normal algorithm code never needs them.)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -36,14 +46,28 @@ spec = api.DeploymentSpec(
     overrides=tuple({"num_layers": 2, "d_model": 64, "num_heads": 4,
                      "num_kv_heads": 2, "head_dim": 16, "d_ff": 128,
                      "vocab_size": 128, "attn_q_chunk": 32}.items()))
-router.create_deployment(spec, group_id=0)
+dep = router.deploy(spec, group_id=0)     # bound client handle
 
-fut_init = router.submit_queued_operation(api.make_op(spec, api.Op.INIT, 0))
+init_f = dep.init(seed=0)
 prompts = jax.random.randint(jax.random.PRNGKey(2), (4, 8), 3, 128)
-fut_gen = router.submit_queued_operation(
-    api.make_op(spec, api.Op.GENERATE, prompts, max_new_tokens=8,
-                prerequisites=(fut_init,) and ()))
+# the dataflow chain: init gates generate through `after=` (pure ordering),
+# and `.then` interposes a client-side transform on the rollout result; a
+# future passed as a later op's ARGUMENT would add the prerequisite edge
+# and dispatch-time value splice automatically (the controllers do exactly
+# that with their packed train batches)
+gen_f = dep.generate(prompts, max_new_tokens=8, after=(init_f,))
+count_f = gen_f.then(lambda g: int((jnp.asarray(g["tokens"]) > 0).sum()))
 router.drain()                            # the scheduler admits + executes
-gen = fut_gen.result()
-print("generated:", gen["tokens"].shape, "logprobs:", gen["logprobs"].shape)
+gen = gen_f.result()
+print("generated:", gen["tokens"].shape, "logprobs:", gen["logprobs"].shape,
+      "non-pad tokens:", count_f.result())
 print("state manager usage:", router.state_managers[0].usage())
+
+# ------------------------------------------------------- 3. serve-mode plane
+# The same chain against the PERSISTENT dispatch plane: workers park on the
+# scheduler's condition variable while idle, admit the moment work arrives,
+# and the client just blocks on futures. Jobs can attach and detach while
+# the plane is live (see examples/multiplex_rlvr.py Part 3).
+with router:                              # serve() ... shutdown()
+    gen2 = dep.generate(prompts, max_new_tokens=8).wait(timeout=120)
+print("serve-mode generate:", gen2["tokens"].shape)

@@ -2,20 +2,33 @@
 
 Runs REAL model execution (CPU devices here; mesh slices on a pod):
 multiple RLVR jobs share node groups, HRRS orders their function requests,
-and context switches move model state through the StateManager tiers. This
-is what examples/multiplex_rlvr.py drives to demonstrate the paper's
-two-job packing gain end-to-end, and what the fault-tolerance tests use for
-checkpoint/restart and migration.
+and context switches move model state through the StateManager tiers.
+
+Two operating modes:
+
+- :meth:`run` — batch: every registered job is driven to completion under
+  shared scheduling (the isolated/multiplexed comparisons of
+  examples/multiplex_rlvr.py, and the fault-tolerance tests).
+- :meth:`serve` — serviceized (the paper's §4.1 regime): the Router's
+  persistent dispatch plane runs continuously, :meth:`add_job` attaches a
+  job mid-flight (each controller self-drives on its own client thread),
+  :meth:`remove_job` detaches one (queued ops cancel, in-flight ops
+  resolve), and billing stays incremental throughout.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Dict, List, Optional
+import threading
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import api
-from repro.core.controller import JobConfig, RLControllerGRPO
+from repro.core.controller import (JobConfig, RLControllerGRPO,
+                                   RLControllerPPO, _RLControllerBase)
 from repro.core.router import Router
 from repro.core.state_manager import StateManager, Tier
+
+CONTROLLER_TYPES = {"grpo": RLControllerGRPO, "ppo": RLControllerPPO}
 
 
 @dataclasses.dataclass
@@ -32,21 +45,175 @@ class BillingRecord:
 class PlexCluster:
     def __init__(self, n_groups: int = 1, policy: str = "hrrs"):
         self.router = Router(policy=policy)
-        self.controllers: Dict[str, RLControllerGRPO] = {}
+        self.controllers: Dict[str, _RLControllerBase] = {}
         self.billing: Dict[str, BillingRecord] = {}
         # incremental billing cursors: exec-log offset per deployment and
         # consumed prefix of the router's switch log
         self._billed_ops: Dict[str, int] = {}
         self._billed_switches = 0
+        self._bill_lock = threading.Lock()
+        # serve mode
+        self._serving = False
+        # serializes client-thread launches against serve() startup so a
+        # concurrent add_job can never double-drive one controller
+        self._serve_lock = threading.RLock()
+        self._job_threads: Dict[str, Tuple[threading.Thread,
+                                           threading.Event]] = {}
+        self._removed_jobs: set = set()
+        self.client_errors: Dict[str, BaseException] = {}
         for g in range(n_groups):
-            self.router.state_managers[g] = StateManager(node_id=f"group{g}")
+            self.router.state_managers[g] = StateManager(
+                node_id=f"group{g}", clock=self.router.now)
 
     # ------------------------------------------------------------- jobs
-    def add_job(self, cfg: JobConfig, group_id: int = 0) -> RLControllerGRPO:
-        ctl = RLControllerGRPO(cfg, self.router, group_id=group_id)
+    def add_job(self, cfg: JobConfig, group_id: int = 0,
+                algo: str = "grpo") -> _RLControllerBase:
+        """Attach a job. Outside serve mode it is registered for the next
+        :meth:`run`; against a live :meth:`serve` plane it starts making
+        progress immediately on its own client thread (spawning a dispatch
+        worker for ``group_id`` if the group is new)."""
+        ctl = CONTROLLER_TYPES[algo](cfg, self.router, group_id=group_id)
         self.controllers[cfg.job_id] = ctl
-        self.billing[cfg.job_id] = BillingRecord(cfg.job_id)
+        # a re-attached job keeps accruing on its existing bill — charges
+        # from before a detach are an invoice, not scratch state
+        self.billing.setdefault(cfg.job_id, BillingRecord(cfg.job_id))
+        self._removed_jobs.discard(cfg.job_id)
+        with self._serve_lock:
+            # under the lock serve() uses for its own launch sweep: the
+            # controller is registered above, so a racing serve() either
+            # sweeps it up or we observe _serving here — never neither,
+            # and _launch_client's registry check means never both
+            if self._serving:
+                self._launch_client(ctl)
         return ctl
+
+    def remove_job(self, job_id: str) -> Optional[_RLControllerBase]:
+        """Detach a job mid-flight (callable from any thread while serving).
+
+        The client thread stops submitting, the job's deployments tear down
+        (queued ops cancel with an error; a RUNNING op completes and
+        resolves its future), and everything the job executed — including
+        work finished during the detach — is billed."""
+        with self._serve_lock:
+            entry = self._job_threads.pop(job_id, None)
+            self._removed_jobs.add(job_id)
+        if entry is not None:
+            entry[1].set()
+        with self.router.executor.cv:
+            dead = {d: self.router.wpgs[d]
+                    for d, s in self.router.deployments.items()
+                    if s.job_id == job_id}
+        for dep_id in dead:
+            self.router.teardown(dep_id)
+        if entry is not None:
+            entry[0].join(timeout=120.0)
+        # teardown already drained each dead deployment's in-flight ops
+        # before returning (their exec-log entries exist), and this is the
+        # LAST billing pass that can see the torn-out WPGs
+        with self._bill_lock:
+            self._bill_from_logs(extra_wpgs=dead)
+            # drop the dead deployments' billing cursors: a later add_job
+            # under the same job_id creates FRESH WPGs with empty exec logs
+            # under the same deployment ids, and a stale cursor would skip
+            # their first N ops
+            for dep_id in dead:
+                self._billed_ops.pop(dep_id, None)
+        return self.controllers.get(job_id)
+
+    # ------------------------------------------------------------ serve
+    @contextlib.contextmanager
+    def serve(self):
+        """Persistent serve mode: ``with cluster.serve(): ...``.
+
+        Jobs added before or during the block self-drive against the live
+        plane; the block body attaches/detaches jobs or does other work. On
+        exit, remaining client threads are joined (jobs run to completion),
+        the plane shuts down, and any client-thread failure is re-raised.
+        """
+        if self._serving:
+            raise RuntimeError("already serving")
+        self.router.serve()
+        self.client_errors = {}
+        with self._serve_lock:
+            self._serving = True
+            controllers = list(self.controllers.values())
+            for ctl in controllers:
+                # relaunch guard: a removed job stays detached and a job
+                # that already completed every step is not re-driven by a
+                # later serve session (its deployment state persists)
+                if (ctl.cfg.job_id in self._removed_jobs
+                        or ctl.steps_completed >= ctl.cfg.steps):
+                    continue
+                self._launch_client(ctl)
+        body_failed = False
+        try:
+            yield self
+            # join to quiescence: a job attached from another thread WHILE
+            # we were joining must also complete, so loop until no client
+            # thread is alive and close the attach window (_serving=False)
+            # under the same lock add_job uses before breaking out
+            while True:
+                for t, _ in list(self._job_threads.values()):
+                    t.join()
+                with self._serve_lock:
+                    if all(not t.is_alive()
+                           for t, _ in self._job_threads.values()):
+                        self._serving = False
+                        break
+        except BaseException:
+            body_failed = True
+            with self._serve_lock:
+                self._serving = False     # stop accepting new launches
+            # body failed: detach every still-driving job so its client
+            # thread unblocks promptly (teardown poisons outstanding ops)
+            # instead of being orphaned against a dead plane
+            for job_id in list(self._job_threads):
+                try:
+                    self.remove_job(job_id)
+                except Exception:       # noqa: BLE001 - best-effort detach
+                    pass
+            raise
+        finally:
+            self._serving = False
+            self._job_threads = {}
+            try:
+                self.router.shutdown()
+            except RuntimeError as shut_err:
+                # shutdown reports user-callback errors; never let that
+                # REPLACE an exception already propagating from the body
+                if not body_failed:
+                    raise
+                self.client_errors.setdefault("<callbacks>", shut_err)
+            with self._bill_lock:
+                self._bill_from_logs()
+        if self.client_errors:
+            job, err = next(iter(self.client_errors.items()))
+            raise RuntimeError(
+                f"job {job!r} client thread failed: {err!r}") from err
+
+    def _launch_client(self, ctl: _RLControllerBase):
+        job_id = ctl.cfg.job_id
+        with self._serve_lock:
+            if job_id in self._job_threads:
+                return                # already driven (serve/add_job race)
+            stop = threading.Event()
+            rec = self.billing[job_id]
+
+            def step_hook():
+                with self._bill_lock:
+                    rec.steps += 1
+                    self._bill_from_logs()
+
+            def client():
+                try:
+                    ctl.drive(stop=stop, step_hook=step_hook)
+                except BaseException as e:  # noqa: BLE001 - surfaced at exit
+                    self.client_errors[job_id] = e
+
+            t = threading.Thread(target=client, name=f"client-{job_id}",
+                                 daemon=True)
+            self._job_threads[job_id] = (t, stop)
+        t.start()
 
     # -------------------------------------------------------------- run
     def run(self, interleave: bool = True,
@@ -66,39 +233,58 @@ class PlexCluster:
                 self.router.run_until_idle()
             else:
                 self.router.drain()
-            self._bill_from_logs()
+            with self._bill_lock:
+                self._bill_from_logs()
 
-        for ctl in self.controllers.values():
-            ctl.submit_init()
+        # jobs detached by remove_job stay detached (their deployments are
+        # gone), and a job a prior serve() session already completed is not
+        # re-driven; partially-driven jobs resume from where they stopped
+        active = {j: c for j, c in self.controllers.items()
+                  if j not in self._removed_jobs
+                  and c.steps_completed < c.cfg.steps}
+        tails: List[api.Future] = []
+        for ctl in active.values():
+            if ctl.steps_completed == 0:       # resumed jobs keep weights
+                tails.append(ctl.submit_init())
         drive()
 
-        remaining = {j: c.cfg.steps for j, c in self.controllers.items()}
-        order = list(self.controllers)
+        remaining = {j: c.cfg.steps - c.steps_completed
+                     for j, c in active.items()}
+        order = list(active)
         while any(v > 0 for v in remaining.values()):
             for job_id in order:
                 if remaining[job_id] <= 0:
                     continue
-                self.controllers[job_id].submit_step()
+                tails += active[job_id].submit_step()
                 remaining[job_id] -= 1
                 if not interleave:
                     drive()
             if interleave:
                 drive()
         drive()
-        for job_id, ctl in self.controllers.items():
+        for f in tails:
+            f.result()                # surface failed steps loudly
+        for job_id, ctl in active.items():
+            ctl.steps_completed = ctl.cfg.steps
             self.billing[job_id].steps = ctl.cfg.steps
         return self.billing
 
-    def _bill_from_logs(self):
+    def _bill_from_logs(self, extra_wpgs: Optional[Dict[str, object]] = None):
         """Attribute measured execution time per job from WPG exec logs and
         switch overheads from the router's switch log (unified provisioning:
         §7.2 — users pay for the computation they consume).
 
         Incremental: only log entries beyond each cursor are consumed, and
         busy time ACCUMULATES across a job's deployments (a job with split
-        train/rollout WPGs is billed for both, where the previous version
-        kept only whichever deployment iterated last)."""
-        for dep_id, wpg in self.router.wpgs.items():
+        train/rollout WPGs is billed for both). ``extra_wpgs`` lets a detach
+        bill a deployment that was already torn out of the router. Callers
+        hold ``_bill_lock`` (client threads bill concurrently)."""
+        with self.router.executor.cv:
+            items = list(self.router.wpgs.items())
+        if extra_wpgs:
+            seen = {d for d, _ in items}
+            items += [(d, w) for d, w in extra_wpgs.items() if d not in seen]
+        for dep_id, wpg in items:
             rec = self.billing.get(wpg.spec.job_id)
             if rec is None:
                 continue
@@ -138,7 +324,8 @@ class PlexCluster:
         (paper §4.5.3 cross-node migration)."""
         src = self.router.state_managers[src_group]
         dst = self.router.state_managers.setdefault(
-            dst_group, StateManager(node_id=f"group{dst_group}"))
+            dst_group, StateManager(node_id=f"group{dst_group}",
+                                    clock=self.router.now))
         moved = 0
         for dep_id, wpg in self.router.wpgs.items():
             if wpg.spec.job_id != job_id:

@@ -5,10 +5,25 @@ purely through the remote service API: generate -> (verify) -> compute
 logprobs -> update actor -> sync weights. Swapping the algorithm (GRPO vs
 PPO, sync vs one-step-async) changes ONLY this file — deployment topology,
 scheduling and state movement stay in the system layers.
+
+A step is a *straight-line dataflow chain* against the client API: each
+``Deployment`` method returns a chainable future, ``.then(fn)`` interposes
+controller-side transforms (packing rollouts into train batches, recording
+metrics), and passing a future as the next op's argument IS the dependency
+edge — the Router gates admission on it and splices the resolved value in
+at dispatch. No req_id bookkeeping, no nested completion callbacks.
+
+Controllers run under any driver: the serial ``run()`` convenience loop
+(submit + ``drain()``), or ``drive()`` self-pacing against a live
+``Router.serve()`` plane from the controller's own client thread (the
+multi-tenant regime — jobs attach, progress, and detach against a
+continuously running service).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -34,8 +49,12 @@ class JobConfig:
     overrides: tuple = ()
 
 
-class RLControllerGRPO:
-    """One RLVR job written against the service API."""
+class _RLControllerBase:
+    """Shared client-side plumbing: one train deployment, the synthetic
+    verifiable-math pipeline, rollout packing, and the two driver loops.
+    Subclasses implement :meth:`submit_step` as a dataflow chain."""
+
+    role_suffix = "train"
 
     def __init__(self, cfg: JobConfig, router: Router, group_id: int = 0):
         self.cfg = cfg
@@ -44,92 +63,193 @@ class RLControllerGRPO:
         self.batches = self.dataset.batches(cfg.batch_size, cfg.prompt_len,
                                             cfg.group_size)
         self.train_dep = api.DeploymentSpec(
-            deployment_id=f"{cfg.job_id}-train", job_id=cfg.job_id,
+            deployment_id=f"{cfg.job_id}-{self.role_suffix}",
+            job_id=cfg.job_id,
             model_name=cfg.model_name, role="train",
             overrides=cfg.overrides)
         # rollout reuses the train deployment in this colpooled runtime;
         # a split deployment would create a second spec with role="rollout".
-        router.create_deployment(self.train_dep, group_id=group_id)
+        self.dep: api.Deployment = router.deploy(self.train_dep,
+                                                 group_id=group_id)
         self.metrics_log: List[dict] = []
         self.reward_log: List[float] = []
+        self.steps_completed = 0
         self._step_idx = 0
-        self._update_reqs: Dict[int, int] = {}
+        # step index -> tail future of that step's weight update (the
+        # one-step-async gate: a pure-ordering `after=` edge, no payload)
+        self._updates: Dict[int, api.Future] = {}
 
     # ------------------------------------------------------------ pieces
     def submit_init(self) -> api.Future:
-        return self.router.submit_queued_operation(
-            api.make_op(self.train_dep, api.Op.INIT, self.cfg.seed,
-                        exec_estimate=1.0))
+        return self.dep.init(self.cfg.seed, exec_estimate=1.0)
 
-    def _pack(self, prompts, answers, gen_result) -> Dict[str, np.ndarray]:
+    def _pack(self, prompts, answers, gen_result) -> Dict[str, "np.ndarray"]:
+        import jax.numpy as jnp
         toks = np.asarray(gen_result["tokens"])
         logps = np.asarray(gen_result["logprobs"])
         texts = [data_lib.decode(t) for t in toks]
         rewards = reward_lib.batch_rewards(texts, answers)
         self.reward_log.append(float(rewards.mean()))
-        return data_lib.pack_rollout_batch(
+        batch = data_lib.pack_rollout_batch(
             prompts, toks, logps, rewards,
             self.cfg.group_size, self.cfg.seq_len)
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+
+    def _gate(self) -> tuple:
+        """One-step-async staleness gate (§6.3): generation of step k waits
+        on the update of step k-1-s, expressed as an `after=` future."""
+        gate_idx = self._step_idx - 1 - self.cfg.async_staleness
+        # entries older than the gate are dead: prune so a long-running
+        # serviceized job holds at most staleness+2 update futures
+        for k in [k for k in self._updates if k < gate_idx]:
+            del self._updates[k]
+        if gate_idx >= 0 and gate_idx in self._updates:
+            return (self._updates[gate_idx],)
+        return ()
+
+    def _record_metrics(self, metrics: dict) -> dict:
+        self.metrics_log.append(metrics)
+        return metrics
 
     # ----------------------------------------------------------- the loop
     def submit_step(self, gen_estimate: float = 1.0,
                     train_estimate: float = 1.0) -> List[api.Future]:
+        raise NotImplementedError
+
+    def run(self):
+        """Synchronous convenience loop (drives the router inline)."""
+        init_f = self.submit_init()
+        self.router.drain()
+        init_f.result()
+        tails: List[api.Future] = []
+        if self.cfg.async_staleness:
+            # pipeline: keep `staleness+1` steps in flight
+            for _ in range(self.cfg.steps):
+                tails += self.submit_step()
+                self.router.step(max_ops=2)
+            self.router.drain()
+        else:
+            for _ in range(self.cfg.steps):
+                tails += self.submit_step()
+                self.router.drain()
+        for f in tails:
+            f.result()          # a lost step is loud, not silently skipped
+        self.steps_completed = self.cfg.steps
+        return {"rewards": self.reward_log, "metrics": self.metrics_log}
+
+    def drive(self, stop: Optional[threading.Event] = None,
+              step_hook: Optional[Callable[[], None]] = None,
+              step_timeout: float = 300.0):
+        """Self-driving client loop against a live ``Router.serve()`` plane.
+
+        Blocking; meant to run on the job's own client thread. Keeps
+        ``async_staleness + 1`` steps in flight and waits on each step's
+        tail future. ``stop`` detaches cooperatively: no new steps are
+        submitted, and errors from operations the teardown poisoned are
+        treated as a clean exit rather than failures."""
+        try:
+            if self.steps_completed == 0:
+                self.submit_init().wait(timeout=step_timeout)
+            inflight: collections.deque = collections.deque()
+            for _ in range(self.cfg.steps - self.steps_completed):
+                if stop is not None and stop.is_set():
+                    break
+                inflight.append(self.submit_step())
+                while len(inflight) > self.cfg.async_staleness:
+                    self._finish_step(inflight.popleft(), step_timeout,
+                                      step_hook)
+            while inflight:
+                self._finish_step(inflight.popleft(), step_timeout,
+                                  step_hook)
+        except Exception:
+            if stop is not None and stop.is_set():
+                return          # detached mid-flight: poisons are expected
+            raise
+
+    def _finish_step(self, tails: List[api.Future], timeout: float,
+                     step_hook: Optional[Callable[[], None]]):
+        for f in tails:
+            f.wait(timeout=timeout)
+        self.steps_completed += 1
+        if step_hook is not None:
+            step_hook()
+
+
+class RLControllerGRPO(_RLControllerBase):
+    """One GRPO RLVR job written against the dataflow client API."""
+
+    def submit_step(self, gen_estimate: float = 1.0,
+                    train_estimate: float = 1.0) -> List[api.Future]:
         """Issue one RLVR step's operation chain (non-blocking).
 
-        With ``async_staleness = s > 0`` the generation of step k is gated
-        only on the update of step k-1-s (one-step-async for s=1, §6.3:
-        "asynchronous rollout permits one step of staleness, with
-        synchronization enforced at the end of each iteration"); the
-        importance-sampling correction in GRPO absorbs the stale policy.
+        generate -> pack (controller-side) -> update_actor, as straight-line
+        dataflow: the packed batch future is update_actor's argument, so its
+        prerequisite edge and value splice are automatic. With
+        ``async_staleness = s > 0`` generation is gated only on the update
+        of step k-1-s ("asynchronous rollout permits one step of staleness,
+        with synchronization enforced at the end of each iteration", §6.3);
+        the importance-sampling correction in GRPO absorbs the stale policy.
         """
         cfg = self.cfg
         prompts, problems = next(self.batches)
         answers = [p.answer for p in problems]
 
-        gate_idx = self._step_idx - 1 - cfg.async_staleness
-        prereqs = ()
-        if gate_idx >= 0 and gate_idx in self._update_reqs:
-            prereqs = (self._update_reqs[gate_idx],)
-        gen = api.make_op(self.train_dep, api.Op.GENERATE, prompts,
-                          exec_estimate=gen_estimate,
-                          max_new_tokens=cfg.max_new_tokens,
-                          prerequisites=prereqs)
-        gen_f = self.router.submit_queued_operation(gen)
-        step_idx = self._step_idx
-
-        def on_gen(fut: api.Future):
-            import jax.numpy as jnp
-            # a failed generate raises here; the Router records it and the
-            # driver (drain / run_until_idle) re-raises at exit, so a lost
-            # step is loud rather than silently skipped
-            batch = self._pack(prompts, answers, fut.result())
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            upd = api.make_op(self.train_dep, api.Op.UPDATE_ACTOR, batch,
-                              exec_estimate=train_estimate,
-                              prerequisites=(gen.req_id,))
-            self._update_reqs[step_idx] = upd.req_id
-            upd_f = self.router.submit_queued_operation(upd)
-            upd_f.add_done_callback(
-                lambda f: self.metrics_log.append(f.result()))
-
-        # add_done_callback fires immediately if the generate already
-        # completed on a dispatch thread — safe under concurrent execution
-        gen_f.add_done_callback(on_gen)
+        gen_f = self.dep.generate(prompts, max_new_tokens=cfg.max_new_tokens,
+                                  exec_estimate=gen_estimate,
+                                  after=self._gate())
+        batch_f = gen_f.then(
+            lambda res: self._pack(prompts, answers, res))
+        upd_f = self.dep.update_actor(batch_f, exec_estimate=train_estimate)
+        self._updates[self._step_idx] = upd_f
+        metrics_f = upd_f.then(self._record_metrics)
         self._step_idx += 1
-        return [gen_f]
+        return [metrics_f]
 
-    def run(self, driver: Optional[Callable[[], None]] = None):
-        """Synchronous convenience loop (drives the router inline)."""
-        self.submit_init()
-        self.router.drain()
-        if self.cfg.async_staleness:
-            # pipeline: keep `staleness+1` steps in flight
-            for _ in range(self.cfg.steps):
-                self.submit_step()
-                self.router.step(max_ops=2)
-            self.router.drain()
-        else:
-            for _ in range(self.cfg.steps):
-                self.submit_step()
-                self.router.drain()
-        return {"rewards": self.reward_log, "metrics": self.metrics_log}
+
+class RLControllerPPO(_RLControllerBase):
+    """PPO over the same service API, with the fused update split into the
+    primitive ops (paper Tab. 2): GENERATE -> FORWARD (behavior logprobs
+    recomputed under the current policy) -> FORWARD_BACKWARD (rl/ppo.py's
+    clipped surrogate) -> OPTIM_STEP. The four-op chain — including the
+    ``gather`` join of the packed batch with the forward pass — exercises
+    every dataflow primitive, demonstrating that the client API is not
+    GRPO-shaped."""
+
+    def submit_step(self, gen_estimate: float = 1.0,
+                    train_estimate: float = 1.0) -> List[api.Future]:
+        import jax.numpy as jnp
+        cfg = self.cfg
+        prompts, problems = next(self.batches)
+        answers = [p.answer for p in problems]
+
+        gen_f = self.dep.generate(prompts, max_new_tokens=cfg.max_new_tokens,
+                                  exec_estimate=gen_estimate,
+                                  after=self._gate())
+        batch_f = gen_f.then(
+            lambda res: self._pack(prompts, answers, res))
+        # fresh behavior logprobs under the pre-update policy (standard PPO:
+        # the first ratio is exactly 1) as a scheduled FORWARD op
+        logp_f = self.dep.forward(batch_f, exec_estimate=train_estimate)
+
+        def _merge(pair):
+            batch, logp = pair
+            behave = np.zeros(np.asarray(batch["tokens"]).shape, np.float32)
+            behave[:, 1:] = np.asarray(logp, np.float32)
+            return dict(batch, behavior_logprobs=jnp.asarray(behave))
+
+        merged_f = api.gather(batch_f, logp_f).then(_merge)
+        fb_f = self.dep.forward_backward(merged_f, objective="ppo",
+                                         exec_estimate=train_estimate)
+        opt_f = self.dep.optim_step(fb_f.then(lambda r: r["grads"]),
+                                    exec_estimate=train_estimate)
+        self._updates[self._step_idx] = opt_f
+
+        def _record(pair):
+            fb, opt_res = pair
+            metrics = {k: float(v) for k, v in fb["metrics"].items()}
+            metrics.update(opt_res)
+            return self._record_metrics(metrics)
+
+        metrics_f = api.gather(fb_f, opt_f).then(_record)
+        self._step_idx += 1
+        return [metrics_f]

@@ -9,23 +9,34 @@ offload+load operations are prepended transparently.
 
 Dispatch plane
 --------------
-Two drivers share ONE admission path (HRRS scoring + lock-gated start in
-``TaskExecutor``):
+All drivers share ONE admission path (HRRS scoring + lock-gated start in
+``TaskExecutor``). The plane has a *persistent* serve mode and two bounded
+wrappers:
 
-- :meth:`run_until_idle` — the concurrent, event-driven plane: one worker
-  thread per node group blocks on the executor's condition variable, admits
-  the group's next operation the moment the group frees up, and executes it
-  while other groups run their own operations in parallel (per-group
-  ordering is preserved by the exclusive ``GroupLock``; per-WPG execution
-  stays serial). This is what lets job A's rollout overlap job B's training
-  functions — the multiplexing the paper's §5.1/§5.2 design exists for.
+- :meth:`serve` / :meth:`shutdown` — the serviceized runtime: one dispatch
+  worker thread per node group parks on the executor's condition variable
+  indefinitely while idle and admits work the moment it arrives, so
+  independently-arriving jobs multiplex against a continuously running
+  service. :meth:`create_deployment` on a new group while serving spawns
+  that group's worker dynamically; :meth:`teardown` cancels a departing
+  deployment's queued operations (their futures resolve with an error and
+  dependents are poisoned) so detach-while-serving terminates cleanly.
+- :meth:`run_until_idle` — a bounded session of the same worker loop: the
+  workers additionally exit once nothing is queued, running, or firing
+  callbacks (batch semantics over the identical admission/execute path).
 - :meth:`step` / :meth:`drain` — the serial analogue on the same admission
   path, used for the back-to-back baseline and for deterministic replay
   under a :class:`~repro.core.scheduler.executor.VirtualClock`.
 
+Dataflow arguments: an operation whose arguments embed unresolved
+:class:`~repro.core.api.Future`\\ s is held by its auto-registered
+prerequisites and the resolved values are spliced in at dispatch time
+(``QueuedOperation.resolve_args``), so client code chains ops without
+manual req_id wiring.
+
 Failure propagation: an operation that raises resolves its future with the
 error, and any queued operation whose prerequisite FAILED is itself failed
-("poisoned") instead of waiting forever, so both drivers always terminate.
+("poisoned") instead of waiting forever, so every driver always terminates.
 """
 from __future__ import annotations
 
@@ -54,44 +65,126 @@ class Router:
         self.group_of: Dict[str, int] = {}       # deployment -> node group
         self.state_managers: Dict[int, StateManager] = {}
         self.executor = TaskExecutor(now=now, policy=policy)
-        self.request_queues: Dict[str, List[api.QueuedOperation]] = {}
+        # per-job queued-op table, keyed by req_id for O(1) finalize
+        self.request_queues: Dict[str, Dict[int, api.QueuedOperation]] = {}
         self.pending: Dict[int, api.QueuedOperation] = {}
         self.switch_log: List[dict] = []
         self.wpg_factory = wpg_factory
         # exceptions raised by user callbacks during future resolution; a
         # broken callback must not kill a dispatch thread mid-protocol
         self.callback_errors: List[Tuple[int, BaseException]] = []
+        # persistent serve-mode plane
+        self._serving = False
+        self._serve_stop = threading.Event()
+        self._serve_threads: Dict[int, threading.Thread] = {}
+        self._serve_executed: Dict[int, List[int]] = {}
+        self._serve_err_start = 0
 
     # ----------------------------------------------------------- lifecycle
     def create_deployment(self, spec: api.DeploymentSpec, group_id: int = 0,
                           state_manager: Optional[StateManager] = None):
+        """Register a deployment (low level; returns the WPG). While serving,
+        a deployment on a group without a dispatch worker spawns one, so
+        jobs attach to a live plane without a restart."""
         sm = state_manager or self.state_managers.setdefault(
-            group_id, StateManager(node_id=f"group{group_id}"))
+            group_id, StateManager(node_id=f"group{group_id}",
+                                   clock=self.now))
         self.state_managers[group_id] = sm
         wpg = self.wpg_factory(spec, sm)
-        self.wpgs[spec.deployment_id] = wpg
-        self.deployments[spec.deployment_id] = spec
-        self.group_of[spec.deployment_id] = group_id
-        self.request_queues.setdefault(spec.job_id, [])
+        with self.executor.cv:
+            self.wpgs[spec.deployment_id] = wpg
+            self.deployments[spec.deployment_id] = spec
+            self.group_of[spec.deployment_id] = group_id
+            self.request_queues.setdefault(spec.job_id, {})
+            # read under the same lock serve() writes it, so an attach
+            # concurrent with serve() either lands in serve's group
+            # snapshot or observes _serving and spawns the worker itself
+            serving = self._serving
+        if serving:
+            self._ensure_serve_worker(group_id)
         return wpg
 
+    def deploy(self, spec: api.DeploymentSpec, group_id: int = 0,
+               state_manager: Optional[StateManager] = None) -> api.Deployment:
+        """Client-facing attach: register the deployment and return its bound
+        :class:`~repro.core.api.Deployment` handle (the dataflow API)."""
+        self.create_deployment(spec, group_id=group_id,
+                               state_manager=state_manager)
+        return api.Deployment(spec, self)
+
     def teardown(self, deployment_id: str):
-        wpg = self.wpgs.pop(deployment_id, None)
+        """Detach a deployment from the (possibly live) plane.
+
+        Its queued operations are cancelled: each resolves its future with a
+        teardown error, and anything depending on them is poisoned through
+        the normal failure path. An operation already RUNNING completes and
+        resolves its future normally. The job's request queue is dropped
+        once its last deployment detaches."""
+        cancelled: List[Tuple[api.QueuedOperation, Exception]] = []
+        ex = self.executor
+        with ex.cv:
+            wpg = self.wpgs.pop(deployment_id, None)
+            spec = self.deployments.pop(deployment_id, None)
+            self.group_of.pop(deployment_id, None)
+            if spec is not None:
+                err = RuntimeError(
+                    f"deployment {deployment_id} torn down")
+                for qop in list(self.pending.values()):
+                    if qop.deployment_id != deployment_id:
+                        continue
+                    task = self.executor.tasks.get(qop.req_id)
+                    if task is None or task.state != State.QUEUED:
+                        # RUNNING (possibly admitted but not yet executing):
+                        # pin the backend so the op completes normally even
+                        # though the wpg table entry is gone
+                        qop.pinned_wpg = wpg
+                        continue
+                    self.executor.finish(task, error=str(err))
+                    self._finalize(qop)
+                    cancelled.append((qop, err))
+                if not any(s.job_id == spec.job_id
+                           for s in self.deployments.values()):
+                    self.request_queues.pop(spec.job_id, None)
+            if cancelled:
+                # hold the idle guard across the error callbacks below:
+                # finish() already dropped the open count, and a callback
+                # may resubmit (same protocol as _reap_and_resolve)
+                ex.inflight += 1
         if wpg is not None:
+            # an op pinned mid-execute still reads this deployment's managed
+            # state: let it drain before the entries are dropped (bounded;
+            # submits to the torn-down deployment are rejected, so the set
+            # of its pending ops can only shrink)
+            with ex.cv:
+                ex.cv.wait_for(
+                    lambda: not any(q.deployment_id == deployment_id
+                                    for q in self.pending.values()),
+                    timeout=120.0)
             wpg.sm.unregister(wpg.sm.keys_for(wpg.job_prefix))
-        self.deployments.pop(deployment_id, None)
-        self.group_of.pop(deployment_id, None)
+        if cancelled:
+            try:
+                for qop, err in cancelled:
+                    self._resolve_future(qop, None, err)
+            finally:
+                with ex.cv:
+                    ex.inflight -= 1
+                    ex.cv.notify_all()
 
     # -------------------------------------------------------------- submit
     def submit_queued_operation(self, qop: api.QueuedOperation) -> api.Future:
         """Non-blocking API handler (§5.2.2): wrap + enqueue, return at once.
 
         Thread-safe: future callbacks submit follow-up operations from
-        dispatch worker threads while the controller submits from its own.
-        """
+        dispatch worker threads while controllers submit from client
+        threads; a live serve plane admits the op the moment its group and
+        prerequisites allow."""
         with self.executor.cv:
+            if qop.deployment_id not in self.group_of:
+                raise RuntimeError(
+                    f"unknown deployment {qop.deployment_id!r} "
+                    "(never created, or torn down)")
             qop.arrival_time = self.now()
-            self.request_queues.setdefault(qop.job_id, []).append(qop)
+            self.request_queues.setdefault(qop.job_id, {})[qop.req_id] = qop
             req = hrrs.Request(req_id=qop.req_id, job_id=qop.job_id,
                                op=qop.op.value, exec_time=qop.exec_estimate,
                                arrival_time=qop.arrival_time, payload=qop)
@@ -102,18 +195,22 @@ class Router:
         return qop.future
 
     # ------------------------------------------------------------ dispatch
-    def _handle_job_transition(self, group_id: int, qop: api.QueuedOperation):
+    def _handle_job_transition(self, group_id: int, qop: api.QueuedOperation,
+                               target_wpg):
         """Automatic context switching: if the group's resident job differs,
         prepend offload(current) + load(target)."""
         sm = self.state_managers[group_id]
-        target_wpg = self.wpgs[qop.deployment_id]
-        resident = [d for d, g in self.group_of.items()
-                    if g == group_id and d != qop.deployment_id
-                    and self.wpgs[d].resident()
-                    and self.wpgs[d].spec.job_id != qop.job_id]
+        # snapshot the deployment map under the lock: attach/detach may
+        # mutate it from other threads while this group switches
+        with self.executor.cv:
+            resident = [w for d, g in self.group_of.items()
+                        if g == group_id and d != qop.deployment_id
+                        and (w := self.wpgs.get(d)) is not None
+                        and w.spec.job_id != qop.job_id]
+        resident = [w for w in resident if w.resident()]
         t_off = 0.0
-        for dep in resident:
-            t_off += self.wpgs[dep].offload(Tier.HOST)
+        for w in resident:
+            t_off += w.offload(Tier.HOST)
         t_load = target_wpg.ensure_resident()
         if resident or t_load > 0:
             with self.executor.cv:
@@ -154,13 +251,12 @@ class Router:
     def _finalize(self, qop: api.QueuedOperation):
         """Drop bookkeeping for a finished request (must hold executor.cv).
 
-        Popping ``pending`` here is what bounds memory over long runs — the
-        previous control loop only ever read it."""
+        O(1): both tables are keyed by req_id — under a deep queue the old
+        per-finish list rebuild made finalization O(n) per op."""
         self.pending.pop(qop.req_id, None)
         queue = self.request_queues.get(qop.job_id)
         if queue is not None:
-            self.request_queues[qop.job_id] = [
-                q for q in queue if q.req_id != qop.req_id]
+            queue.pop(qop.req_id, None)
 
     def _reap_poisoned(self) -> List[Tuple[api.QueuedOperation, Exception]]:
         """FAIL every queued task whose prerequisite FAILED (to fixpoint, so
@@ -168,9 +264,12 @@ class Router:
         (qop, error) pairs; callers fire the futures OUTSIDE the lock."""
         out: List[Tuple[api.QueuedOperation, Exception]] = []
         with self.executor.cv:
-            # fast path: the full-table scan below is only worth paying once
-            # some task has actually FAILED (dispatch calls this every loop)
-            if not self.executor.failed_count:
+            # fast path: the full-table scan below is only worth paying
+            # after a failure EVENT (a FAILED transition, or a submission
+            # under an already-failed prereq) — dispatch calls this every
+            # loop, and on a long-lived serve plane "scan forever after the
+            # first failure" would grow per-op cost with plane lifetime
+            if not self.executor.poison_dirty:
                 return out
             changed = True
             while changed:
@@ -190,6 +289,9 @@ class Router:
                         self._finalize(qop)
                         out.append((qop, err))
                     changed = True
+            # fixpoint reached under the lock: nothing QUEUED has a failed
+            # prereq until the next failure event sets the flag again
+            self.executor.poison_dirty = False
         return out
 
     def _reap_and_resolve(self) -> None:
@@ -220,11 +322,20 @@ class Router:
         callbacks may submit follow-up operations."""
         with self.executor.cv:
             qop = self.pending[task.request.req_id]
+            # an op RUNNING when its deployment tore down keeps executing on
+            # the pinned backend, so it still completes (and bills) normally
+            wpg = self.wpgs.get(qop.deployment_id) or qop.pinned_wpg
         result, err = None, None
         try:
+            # dataflow splice: substitute resolved values for future args
+            # (their source ops COMPLETED before this op became admissible)
+            qop.resolve_args()
+            if wpg is None:
+                raise RuntimeError(
+                    f"deployment {qop.deployment_id} torn down")
             if qop.op not in (api.Op.INIT,):
-                self._handle_job_transition(group_id, qop)
-            result = self.wpgs[qop.deployment_id].execute(qop)
+                self._handle_job_transition(group_id, qop, wpg)
+            result = wpg.execute(qop)
         except Exception as e:  # noqa: BLE001 - surface via future
             err = e
         with self.executor.cv:
@@ -238,6 +349,9 @@ class Router:
         """Serial driver on the shared admission path: admit + execute up to
         ``max_ops`` operations inline (the back-to-back baseline, and the
         deterministic path under a virtual clock)."""
+        if self._serving:
+            raise RuntimeError("serial driver unavailable while serve() "
+                               "workers own the plane; shutdown() first")
         err_start = len(self.callback_errors)
         executed = 0
         for _ in range(max_ops):
@@ -267,20 +381,148 @@ class Router:
             total += n
         return total
 
-    # -------------------------------------------------- concurrent driver
+    # ------------------------------------------------ shared worker loop
+    def _worker_loop(self, group_id: int, stop: threading.Event,
+                     persistent: bool, executed: List[int], slot: int,
+                     deadline: Optional[float] = None):
+        """One node group's dispatch worker. Fully signal-driven: the ONLY
+        blocking point is an untimed wait on the executor's condition
+        variable; every state change that could unblock it notifies —
+        submit, finish, inflight decrement, idle detection, and the stop
+        token — so an idle dispatcher performs zero wakeups between
+        submissions.
+
+        ``persistent`` workers (serve mode) park on the cv when the plane
+        is idle; bounded workers (run_until_idle) exit instead."""
+        ex = self.executor
+        while not stop.is_set():
+            self._reap_and_resolve()
+            task = None
+            with ex.cv:
+                if stop.is_set():
+                    return
+                t = ex.pick_next(group_id)
+                if t is not None and ex.try_start(t):
+                    ex.inflight += 1
+                    task = t
+                elif (not persistent and ex.outstanding() == 0
+                        and ex.inflight == 0):
+                    ex.cv.notify_all()
+                    return
+                else:
+                    ex.cv.wait()
+                    # woken by a notification: re-run the reap (the wakeup
+                    # may have been a FAILED finish) and re-check
+                    # stop/idle/admission from the loop top
+                    continue
+            try:
+                self._execute_admitted(group_id, task)
+                executed[slot] += 1
+            finally:
+                with ex.cv:
+                    ex.inflight -= 1
+                    ex.cv.notify_all()
+            if deadline is not None and time.monotonic() > deadline:
+                stop.set()
+                with ex.cv:
+                    ex.cv.notify_all()
+
+    # ------------------------------------------------------- serve plane
+    def _ensure_serve_worker(self, group_id: int):
+        with self.executor.cv:
+            # re-check under the lock: an attach that observed a live plane
+            # may race shutdown(); spawning against the already-set stop
+            # token would register a dead worker
+            if not self._serving or self._serve_stop.is_set():
+                return
+            if group_id in self._serve_threads:
+                return
+            counter = [0]
+            self._serve_executed[group_id] = counter
+            t = threading.Thread(
+                target=self._worker_loop,
+                args=(group_id, self._serve_stop, True, counter, 0),
+                name=f"serve-g{group_id}", daemon=True)
+            self._serve_threads[group_id] = t
+        t.start()
+
+    def serve(self):
+        """Start the persistent dispatch plane: one parked worker per known
+        node group, new groups joining dynamically via
+        :meth:`create_deployment`. Returns immediately; pair with
+        :meth:`shutdown` (or use as a context manager)."""
+        with self.executor.cv:
+            if self._serving:
+                raise RuntimeError("already serving")
+            self._serve_stop = threading.Event()
+            self._serve_threads = {}
+            self._serve_executed = {}
+            self._serve_err_start = len(self.callback_errors)
+            self._serving = True
+            groups = sorted(set(self.group_of.values()))
+        for g in groups:
+            self._ensure_serve_worker(g)
+
+    def shutdown(self, timeout: Optional[float] = None):
+        """Stop the serve plane: parked workers exit immediately; a worker
+        mid-execute finishes its operation first (bounded by ``timeout`` if
+        given, after which it is abandoned as a daemon). Raises at the end
+        if any user callback raised while serving."""
+        if not self._serving:
+            return
+        self._serve_stop.set()
+        with self.executor.cv:
+            self.executor.cv.notify_all()
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for t in self._serve_threads.values():
+            t.join(timeout=None if deadline is None
+                   else max(0.0, deadline - time.monotonic()))
+        with self.executor.cv:
+            self._serving = False
+            self._serve_threads = {}
+        self._raise_callback_errors(self._serve_err_start)
+
+    def __enter__(self) -> "Router":
+        self.serve()
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False
+
+    @property
+    def serving(self) -> bool:
+        return self._serving
+
+    def serve_executed(self) -> int:
+        """Operations executed by the current/last serve plane."""
+        return sum(c[0] for c in self._serve_executed.values())
+
+    def wait_idle(self, timeout: Optional[float] = None):
+        """Block until nothing is queued, running, or firing callbacks.
+        Usable from any client thread against a live serve plane."""
+        ex = self.executor
+        with ex.cv:
+            ok = ex.cv.wait_for(
+                lambda: ex.outstanding() == 0 and ex.inflight == 0, timeout)
+        if not ok:
+            raise TimeoutError(f"plane not idle within {timeout}s")
+
+    # -------------------------------------------------- bounded driver
     def run_until_idle(self, timeout: Optional[float] = None) -> int:
-        """Event-driven concurrent dispatch: one worker thread per node
-        group. Each worker blocks on the executor's condition variable,
-        admits its group's next operation as soon as the group frees up
-        (per-WPG ordering preserved by the exclusive GroupLock), and runs it
-        while other groups execute concurrently. Returns once no operation
-        is queued, running, or firing callbacks.
+        """A bounded session of the dispatch plane: the same per-group
+        worker loop as :meth:`serve`, but workers exit once no operation
+        is queued, running, or firing callbacks. Returns the number of
+        operations executed.
 
         ``timeout`` (wall-clock seconds) bounds the whole call; on expiry a
         ``TimeoutError`` is raised with the stuck operations listed. A worker
         blocked INSIDE ``wpg.execute`` cannot be interrupted — after a 1 s
         grace it is abandoned as a daemon thread so the bound still holds.
         """
+        if self._serving:
+            raise RuntimeError("run_until_idle unavailable while serve() "
+                               "workers own the plane; shutdown() first")
         groups = sorted(set(self.group_of.values()))
         if not groups:
             return 0
@@ -290,55 +532,11 @@ class Router:
         timed_out = threading.Event()
         ex = self.executor
 
-        def idle() -> bool:
-            # under ex.cv: nothing queued/running anywhere AND no worker is
-            # between finish() and its future's callbacks (which may submit)
-            return ex.outstanding() == 0 and ex.inflight == 0
-
-        def worker(slot: int, group_id: int):
-            # Fully signal-driven: the ONLY blocking point is an untimed
-            # wait on the executor's condition variable. Every state change
-            # that could unblock a worker notifies it — submit, finish,
-            # inflight decrement, idle detection, and the shutdown token
-            # (timed_out) — so an idle dispatcher performs zero wakeups
-            # between submissions (PR 1 used a 50 ms guard timeout here).
-            while not timed_out.is_set():
-                self._reap_and_resolve()
-                task = None
-                with ex.cv:
-                    t = ex.pick_next(group_id)
-                    if t is not None and ex.try_start(t):
-                        ex.inflight += 1
-                        task = t
-                    elif idle():
-                        ex.cv.notify_all()
-                        return
-                    else:
-                        ex.cv.wait()
-                        # woken by a notification: re-run the reap (the
-                        # wakeup may have been a FAILED finish) and re-check
-                        # shutdown/idle/admission from the loop top
-                        continue
-                try:
-                    self._execute_admitted(group_id, task)
-                    executed[slot] += 1
-                finally:
-                    with ex.cv:
-                        ex.inflight -= 1
-                        ex.cv.notify_all()
-                if deadline is not None and time.monotonic() > deadline:
-                    timed_out.set()
-                    with ex.cv:
-                        ex.cv.notify_all()
-
-        def signal_shutdown():
-            timed_out.set()
-            with ex.cv:
-                ex.cv.notify_all()
-
-        threads = [threading.Thread(target=worker, args=(i, g),
-                                    name=f"dispatch-g{g}", daemon=True)
-                   for i, g in enumerate(groups)]
+        threads = [threading.Thread(
+            target=self._worker_loop,
+            args=(g, timed_out, False, executed, i, deadline),
+            name=f"dispatch-g{g}", daemon=True)
+            for i, g in enumerate(groups)]
         for t in threads:
             t.start()
         for t in threads:
@@ -353,7 +551,9 @@ class Router:
                     t.join(timeout=remaining)
                     continue
                 if not timed_out.is_set():
-                    signal_shutdown()
+                    timed_out.set()
+                    with ex.cv:
+                        ex.cv.notify_all()
                 # shutdown signalled: workers parked on the cv exit
                 # immediately; one stuck INSIDE wpg.execute (threads cannot
                 # be killed) gets a 1 s grace, then is abandoned (daemon) so

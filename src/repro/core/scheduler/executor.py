@@ -126,6 +126,12 @@ class TaskExecutor:
         self.inflight = 0              # ops started but futures not yet fired
         self._open = 0                 # tasks in QUEUED or RUNNING
         self.failed_count = 0          # lifetime FAILED transitions
+        # True whenever some QUEUED task MAY have a failed prerequisite:
+        # set on every FAILED transition and on submit-under-failed-prereq,
+        # cleared by the router once a poison sweep reaches fixpoint — so a
+        # long-lived serve plane pays the full-table reap scan per failure
+        # EVENT, not per dispatch iteration forever after the first failure
+        self.poison_dirty = False
         # Incremental admission index (hrrs policy only): membership is
         # exactly the runnable set — ready QUEUED tasks — maintained on
         # submit / finish / try_start instead of re-derived per admission.
@@ -164,6 +170,10 @@ class TaskExecutor:
             self.locks.setdefault(group_id, GroupLock())
             self.resident_job.setdefault(group_id, None)
             self._open += 1
+            if any(p in self.tasks
+                   and self.tasks[p].state == State.FAILED
+                   for p in t.prerequisites):
+                self.poison_dirty = True   # born poisoned: needs a sweep
             if self.use_admission_index:
                 for p in t.prerequisites:
                     pt = self.tasks.get(p)
@@ -286,6 +296,7 @@ class TaskExecutor:
                 self._open -= 1
             if error:
                 self.failed_count += 1
+                self.poison_dirty = True
             if self.use_admission_index:
                 # poisoned-while-QUEUED tasks may still be indexed
                 self._index_remove(task)

@@ -131,12 +131,19 @@ class StateManager:
 
     # ------------------------------------------------------ tier movement
     def offload(self, keys: Sequence[str], to: Tier = Tier.HOST) -> float:
-        """Move state down the hierarchy. Returns elapsed seconds."""
-        t0 = time.monotonic()
+        """Move state down the hierarchy. Returns elapsed seconds.
+
+        Timed through the injected ``self.clock`` (NOT time.monotonic): under
+        a VirtualClock replay transfers take zero virtual time, so measured
+        C_setup feedback — and therefore HRRS admission — stays
+        deterministic."""
+        t0 = self.clock()
         moved = 0
         for k in keys:
-            e = self.entries[k]
-            if e.tier >= to:
+            e = self.entries.get(k)
+            # a key may vanish mid-iteration when a deployment detaches
+            # concurrently (teardown unregisters); skipping it is the move
+            if e is None or e.tier >= to:
                 continue
             if to == Tier.HOST:
                 arr = np.asarray(jax.device_get(e.ref))
@@ -155,17 +162,18 @@ class StateManager:
             e.tier = to
             e.last_touch = self.clock()
             moved += e.nbytes
-        dt = time.monotonic() - t0
+        dt = self.clock() - t0
         self._record("offload", moved, dt)
         return dt
 
     def prefetch(self, keys: Sequence[str], shardings=None) -> float:
-        """Move state up to DEVICE (scheduler-directed prefetch)."""
-        t0 = time.monotonic()
+        """Move state up to DEVICE (scheduler-directed prefetch). Timed via
+        ``self.clock`` for the same determinism contract as offload."""
+        t0 = self.clock()
         moved = 0
         for i, k in enumerate(keys):
-            e = self.entries[k]
-            if e.tier == Tier.DEVICE:
+            e = self.entries.get(k)
+            if e is None or e.tier == Tier.DEVICE:
                 continue
             if e.tier == Tier.DISK:
                 arr = np.load(e.path)
@@ -181,7 +189,7 @@ class StateManager:
             e.tier = Tier.DEVICE
             e.last_touch = self.clock()
             moved += e.nbytes
-        dt = time.monotonic() - t0
+        dt = self.clock() - t0
         self._record("load", moved, dt)
         self._evict_if_needed()
         return dt

@@ -22,7 +22,7 @@ from repro.configs import get_config
 from repro.core import api
 from repro.core.state_manager import StateManager, Tier
 from repro.models.registry import Model, build_model
-from repro.rl import grpo, rollout as rollout_lib
+from repro.rl import grpo, ppo as ppo_lib, rollout as rollout_lib
 from repro.train import optimizer as opt
 from repro.train.train_state import TrainState
 
@@ -39,6 +39,7 @@ class WorkerProcessGroup:
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.grpo_cfg = grpo_cfg or grpo.GRPOConfig()
+        self.ppo_cfg = ppo_lib.PPOConfig()
         self.adamw_cfg = adamw_cfg or opt.AdamWConfig()
         self._rng = jax.random.PRNGKey(rng_seed)
         self._initialized = False
@@ -47,6 +48,7 @@ class WorkerProcessGroup:
         # jitted primitives (built lazily)
         self._update_actor = None
         self._logprob = None
+        self._ppo_grads = None
 
     # -------------------------------------------------------------- state
     @property
@@ -136,8 +138,21 @@ class WorkerProcessGroup:
             self._logprob = jax.jit(grpo.make_compute_log_prob(self.model))
         return self._logprob(self.params(), batch)
 
-    def _op_forward_backward(self, batch):
+    def _op_forward_backward(self, batch, objective: str = "grpo"):
+        """Split-phase gradient computation. ``objective`` selects the loss
+        family: "grpo" (default) or "ppo" (rl/ppo.py's clipped surrogate),
+        so multi-algorithm jobs share one WPG primitive."""
         params = self.params()
+        if objective == "ppo":
+            if self._ppo_grads is None:
+                def _grads(p, b):
+                    return jax.value_and_grad(ppo_lib.ppo_loss, has_aux=True)(
+                        p, self.model, b, self.ppo_cfg, None)
+                self._ppo_grads = jax.jit(_grads)
+            (loss, metrics), grads = self._ppo_grads(params, batch)
+            return {"grads": grads, "metrics": dict(metrics, loss=loss)}
+        if objective != "grpo":
+            raise ValueError(f"unknown objective {objective!r}")
         grads, metrics = grpo.compute_grads(params, self.model, batch,
                                             self.grpo_cfg, None)
         return {"grads": grads, "metrics": metrics}

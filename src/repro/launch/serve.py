@@ -1,8 +1,11 @@
 """Batched serving driver: prefill + decode loop through the service API.
 
-Demonstrates the rollout side of PlexRL as a standalone deployment: batched
-requests are admitted by the scheduler, prefilled once, then decoded with a
-KV cache. Also reports measured per-phase timings in the Table-2 format.
+Demonstrates the rollout side of PlexRL as a standalone deployment on a
+LIVE serve-mode plane: the Router's dispatch worker parks while idle,
+admits each batched generate the moment it is submitted, and the client
+simply blocks on the returned future — the request/response shape of a
+real inference service, through the same dataflow client API the RL
+controllers use.
 
     PYTHONPATH=src python -m repro.launch.serve --batch 8 --max-new 32
 """
@@ -42,27 +45,25 @@ def main(argv=None):
             ("head_dim", 64), ("d_ff", args.d_model * 4),
             ("vocab_size", 512),
         ))
-    router.create_deployment(spec, group_id=0)
-    router.submit_queued_operation(api.make_op(spec, api.Op.INIT, 0))
-    router.drain()
+    dep = router.deploy(spec, group_id=0)
 
     ds = data_lib.MathDataset(seed=0)
     batches = ds.batches(args.batch, args.prompt_len)
     lat = []
-    for r in range(args.rounds):
-        prompts, problems = next(batches)
-        t0 = time.time()
-        fut = router.submit_queued_operation(
-            api.make_op(spec, api.Op.GENERATE, jnp.asarray(prompts),
-                        max_new_tokens=args.max_new, temperature=0.7))
-        router.drain()
-        out = fut.result()
-        dt = time.time() - t0
-        lat.append(dt)
-        toks = int(np.asarray(out["alive"]).sum())
-        print(f"round {r}: {dt*1000:.0f} ms, {toks} live tokens, "
-              f"{toks / dt:.1f} tok/s, sample: "
-              f"{data_lib.decode(np.asarray(out['tokens'][0]))!r}")
+    with router:                      # persistent plane: serve()...shutdown()
+        dep.init(seed=0).wait(timeout=600)
+        for r in range(args.rounds):
+            prompts, problems = next(batches)
+            t0 = time.time()
+            out = dep.generate(jnp.asarray(prompts),
+                               max_new_tokens=args.max_new,
+                               temperature=0.7).wait(timeout=600)
+            dt = time.time() - t0
+            lat.append(dt)
+            toks = int(np.asarray(out["alive"]).sum())
+            print(f"round {r}: {dt*1000:.0f} ms, {toks} live tokens, "
+                  f"{toks / dt:.1f} tok/s, sample: "
+                  f"{data_lib.decode(np.asarray(out['tokens'][0]))!r}")
     print(f"mean latency {np.mean(lat)*1000:.0f} ms "
           f"(first includes jit compile)")
 

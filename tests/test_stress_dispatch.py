@@ -7,6 +7,10 @@ control overhead flat at this depth), and the serial ``drain()`` replay of
 the same deep workload under a ``VirtualClock`` must produce a bit-identical
 admission order across two runs.
 
+A churn round soaks the persistent serve plane: jobs attach on rotating
+groups, chain dataflow ops, and detach mid-flight; every future must settle
+and the plane must shut down clean.
+
 Tier-1 (`python -m pytest -x -q`) deselects this module via the ``slow``
 marker registered in pytest.ini.
 """
@@ -100,3 +104,59 @@ def test_serial_replay_bit_identical_admission_order():
     second = _virtual_deep_run()
     assert len(first) == N_GROUPS * OPS_PER_GROUP
     assert first == second, "virtual-clock replay diverged between runs"
+
+
+def _serve_worker_threads():
+    return [t for t in threading.enumerate()
+            if t.name.startswith("serve-") and t.is_alive()]
+
+
+def test_job_churn_against_live_serve_plane():
+    """Soak the persistent plane with attach/detach churn: jobs join on
+    rotating groups, submit chained dataflow ops, and half detach with work
+    still queued. Every future must settle (result or teardown/poison
+    error), queues must drop with their jobs, and shutdown must leave no
+    dispatcher threads."""
+    assert not _serve_worker_threads(), "stale serve workers"
+    trace = []
+    router = Router(wpg_factory=lambda spec, sm: StubWPG(spec, sm, 0.001,
+                                                         trace))
+    settled, survivors = [], []
+    with router:
+        for round_no in range(12):
+            deps = []
+            for j in range(4):
+                spec = api.DeploymentSpec(
+                    deployment_id=f"r{round_no}-d{j}",
+                    job_id=f"r{round_no}-job{j}", model_name="stub",
+                    role="train")
+                deps.append(router.deploy(spec, group_id=j % 3))
+            for dep in deps:
+                first = dep.forward(0)
+                chained = dep.update_actor(
+                    first.then(lambda res: {"from": res["req_id"]}))
+                settled.extend([first, chained])
+            # detach half the round's jobs with ops still in flight
+            for dep in deps[::2]:
+                router.teardown(dep.deployment_id)
+            # the others run to completion before the next round piles on
+            for dep in deps[1::2]:
+                survivors.append(dep.forward(1))
+        router.wait_idle(timeout=120.0)
+    resolved = errored = 0
+    for f in settled:
+        assert f.done(), "future never settled under churn"
+        try:
+            f.result()
+            resolved += 1
+        except RuntimeError:
+            errored += 1
+    assert resolved and errored, (resolved, errored)
+    for f in survivors:
+        assert f.result()["req_id"] > 0   # surviving jobs kept progressing
+    # detached jobs' queues dropped; surviving jobs' queues drained empty
+    assert all(not q for q in router.request_queues.values())
+    assert not router.pending
+    assert not _serve_worker_threads(), "leaked serve workers"
+    assert all(lock.holder is None
+               for lock in router.executor.locks.values())
