@@ -3,8 +3,10 @@ data-structure costs (segment-tree gang check, interval-set fitting) in
 microseconds per call, deep-queue per-admission cost of the incremental
 admission index vs Algorithm 1's full re-score, the dispatch plane's
 concurrency gain + per-op control overhead (serial driver vs
-Router.run_until_idle), and the serve-mode submit->admission latency on an
-idle persistent plane.
+Router.run_until_idle), the serve-mode submit->admission latency on an idle
+persistent plane, and the control plane's placement costs: cold/warm fit
+decision latency vs resident-job count, and the wall-clock of a realized
+repack migration (hold -> drain -> StateManager.migrate -> rehome).
 """
 from __future__ import annotations
 
@@ -17,7 +19,10 @@ from repro.core.router import Router
 from repro.core.scheduler import hrrs
 from repro.core.scheduler.executor import TaskExecutor, VirtualClock
 from repro.core.scheduler.intervals import IntervalSet
+from repro.core.scheduler.placement import (NodeGroup, PlacementConfig,
+                                            PlacementPolicy)
 from repro.core.scheduler.ring import CapacityRing
+from repro.core.traces import synthetic_job_mix
 
 
 class _SleepWPG:
@@ -148,6 +153,57 @@ def _admission_us(n_queued: int, n_jobs: int, use_index: bool,
     return dt / n_queued * 1e6
 
 
+def _placement_decision_us(n_resident: int, seed: int = 0) -> tuple:
+    """Cold + warm fit latency against a fleet already hosting
+    ``n_resident`` placed jobs (the §4.3.2 decision hot path)."""
+    horizon = 28_800.0
+    n_groups = max(4, n_resident // 4)
+    pol = PlacementPolicy(
+        [NodeGroup(g, 8, IntervalSet([(0.0, horizon)]))
+         for g in range(n_groups)],
+        PlacementConfig(horizon=horizon))
+    profiles = synthetic_job_mix(n_resident + 1, seed=seed)
+    for i, p in enumerate(profiles[:-1]):
+        pol.place_warm(f"res{i}", p.mean_trace())
+    probe = profiles[-1].mean_trace()
+    # one spare empty group so the cold probe always has a clean target
+    pol.add_group(NodeGroup(n_groups, 8, IntervalSet([(0.0, horizon)])))
+
+    def warm_probe():
+        assert pol.place_warm("probe", probe) is not None
+        pol.remove("probe")
+
+    def cold_probe():
+        assert pol.place_cold("probe", 1, 600.0) is not None
+        pol.remove("probe")
+
+    return _time_us(cold_probe, iters=50), _time_us(warm_probe, iters=20)
+
+
+def _repack_migrate_s(nbytes: int = 8 << 20) -> float:
+    """Wall-clock of ONE realized repack migration through
+    ``Router.reassign_job``: admission hold, in-flight drain,
+    StateManager.migrate of ~nbytes of managed state, queued-op rehome,
+    release. Queued ops survive and complete on the destination group."""
+    router, specs = _stub_router(2, 0.0)
+    spec = specs[0]
+    wpg = router.wpgs[spec.deployment_id]
+    sm = router.state_managers[0]
+    n_arrays = 8
+    arr = np.ones((nbytes // n_arrays // 4,), np.float32)
+    for i in range(n_arrays):
+        sm.register(wpg.job_prefix, {f"w{i}": arr})
+    queued = [router.submit_queued_operation(
+        api.make_op(spec, api.Op.FORWARD, i)) for i in range(16)]
+    t0 = time.perf_counter()
+    router.reassign_job(spec.job_id, 1)
+    dt = time.perf_counter() - t0
+    router.drain()
+    for f in queued:
+        f.result()
+    return dt
+
+
 def run() -> list[tuple[str, float, str]]:
     rows = []
     # HRRS vs FCFS: switches on a comparable-service-time queue — the regime
@@ -202,6 +258,22 @@ def run() -> list[tuple[str, float, str]]:
                      "per admission, 4 jobs/group"))
         rows.append((f"admission/indexed_n{n}_us", idx_us,
                      f"speedup={full_us / max(idx_us, 1e-9):.1f}x"))
+    # deep-queue extension: the indexed path stays flat at 4096 (the full
+    # re-score is omitted there — O(n^2) total, ~30 s for one row)
+    rows.append(("admission/indexed_n4096_us",
+                 _admission_us(4096, n_jobs=4, use_index=True),
+                 "full re-score omitted at this depth"))
+
+    # control plane: placement decision latency vs resident-job count, and
+    # the wall-clock of a realized repack migration (8 MiB managed state)
+    for n_res in (4, 16, 64):
+        cold_us, warm_us = _placement_decision_us(n_res)
+        rows.append((f"placement/decision_cold_n{n_res}_us", cold_us,
+                     f"{n_res} resident jobs"))
+        rows.append((f"placement/decision_warm_n{n_res}_us", warm_us,
+                     "micro-shift fit + interference rank"))
+    rows.append(("placement/repack_migrate_s", _repack_migrate_s(),
+                 "hold+drain+migrate(8MiB)+rehome, 16 queued ops"))
 
     # dispatch plane: cross-group overlap (4 groups x 6 x 10ms ops) and the
     # per-op control overhead of the concurrent driver on zero-cost ops

@@ -25,6 +25,17 @@ job attaches mid-flight on a fresh node group (its dispatch worker spawns
 dynamically), a third job detaches with work still queued — queued ops
 cancel, in-flight ops resolve, and billing stays incremental throughout.
 
+Part 4 (auto-placement + autoscale, §4.3-§4.4): jobs are added with
+`group_id=None`, so the cluster CONTROL PLANE decides where they run. Each
+arrival is cold-placed on a dedicated profiling group (spawned on demand),
+the online profiler folds the executor's per-op task records into its
+JobTrace, and after the warmup cycle the job is re-fitted by micro-shift
+trace fitting — live-migrating onto a shared group (admission hold ->
+in-flight drain -> StateManager.migrate -> queued-op rehome) while the
+drained profiling group is retired. A later arrival finds no clean group
+and triggers a capacity-adjustment spawn. The director's decision log
+prints at the end.
+
 Run:  PYTHONPATH=src python examples/multiplex_rlvr.py
 """
 import time
@@ -130,6 +141,36 @@ def main():
     for job in ("alpha", "beta", "gamma"):
         rec = cluster.billing[job]
         print(f"{job}: steps={rec.steps} billed "
+              f"gpu_s/step={rec.gpu_seconds_per_step():.2f}")
+
+    print("\n=== Part 4: auto-placement + autoscale (the control plane) ===")
+    cluster = PlexCluster(n_groups=1)
+    t0 = time.time()
+    jobs = make_jobs()
+    with cluster.serve():
+        # group_id=None routes each arrival through the PlacementDirector:
+        # cold profiling group -> online JobTrace -> micro-shift warm fit
+        # (+ live migration onto the shared group)
+        cluster.add_job(jobs[0], group_id=None)
+        cluster.add_job(jobs[1], group_id=None)
+        wait_until(cluster, lambda: all(
+            cluster.director.job_state(j) is not None
+            and cluster.director.job_state(j).phase == "warm"
+            for j in ("alpha", "beta")))
+        # a late arrival finds no clean profiling group: capacity spawn
+        late = JobConfig(job_id="delta", model_name="qwen2-0.5b", steps=2,
+                         batch_size=8, group_size=4, max_new_tokens=6,
+                         seq_len=32, overrides=TINY, seed=4)
+        cluster.add_job(late, group_id=None)
+    print(f"serve wall {time.time() - t0:.1f}s; control-plane decisions:")
+    for e in cluster.director.events:
+        print("  ", {k: (round(v, 3) if isinstance(v, float) else v)
+                     for k, v in e.items()})
+    for job in ("alpha", "beta", "delta"):
+        js = cluster.director.job_state(job)
+        rec = cluster.billing[job]
+        print(f"{job}: phase={js.phase} group={js.group_id} "
+              f"steps={rec.steps} billed "
               f"gpu_s/step={rec.gpu_seconds_per_step():.2f}")
 
     print("\nNOTE: on one CPU every op is compute-bound and XLA already"

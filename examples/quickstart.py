@@ -71,3 +71,20 @@ print("state manager usage:", router.state_managers[0].usage())
 with router:                              # serve() ... shutdown()
     gen2 = dep.generate(prompts, max_new_tokens=8).wait(timeout=120)
 print("serve-mode generate:", gen2["tokens"].shape)
+
+# --------------------------------------------- 4. automatic placement (jobs)
+# At the JOB level placement itself is a service decision. The contract:
+#
+#     cluster = PlexCluster(n_groups=1)
+#     with cluster.serve():
+#         cluster.add_job(cfg, group_id=None)    # <- the control plane picks
+#
+# ``group_id=None`` routes the arrival through the cluster control plane
+# (core/control_plane.py): the job is COLD-placed on a dedicated profiling
+# group (spawned on demand), its phase durations are profiled online from
+# the executor's task records, and after the warmup cycle it is re-fitted by
+# micro-shift trace fitting and LIVE-MIGRATED onto a shared group; capacity
+# adjustment spawns/retires groups from queue-depth telemetry, and
+# `cluster.director.events` is the audit log of every decision. Passing an
+# explicit ``group_id`` pins the job and bypasses the director entirely.
+# See examples/multiplex_rlvr.py Part 4 for the full flow.

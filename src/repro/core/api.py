@@ -403,10 +403,12 @@ class Deployment:
                          temperature=temperature,
                          exec_estimate=exec_estimate, after=after, **kwargs)
 
-    def forward(self, batch, *, exec_estimate: float = 1.0,
-                after: Tuple = ()) -> Future:
-        return self.call(Op.FORWARD, batch, exec_estimate=exec_estimate,
-                         after=after)
+    def forward(self, batch, *, output: str = "logprobs",
+                exec_estimate: float = 1.0, after: Tuple = ()) -> Future:
+        """Forward-only op; ``output`` picks the readout ("logprobs" for
+        compute_log_prob, "values" for a critic deployment)."""
+        return self.call(Op.FORWARD, batch, output=output,
+                         exec_estimate=exec_estimate, after=after)
 
     def forward_backward(self, batch, *, objective: str = "grpo",
                          exec_estimate: float = 1.0,

@@ -23,6 +23,7 @@ import threading
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import api
+from repro.core.control_plane import DirectorConfig, PlacementDirector
 from repro.core.controller import (JobConfig, RLControllerGRPO,
                                    RLControllerPPO, _RLControllerBase)
 from repro.core.router import Router
@@ -43,8 +44,11 @@ class BillingRecord:
 
 
 class PlexCluster:
-    def __init__(self, n_groups: int = 1, policy: str = "hrrs"):
-        self.router = Router(policy=policy)
+    def __init__(self, n_groups: int = 1, policy: str = "hrrs",
+                 wpg_factory=None,
+                 director_cfg: Optional[DirectorConfig] = None):
+        kwargs = {} if wpg_factory is None else {"wpg_factory": wpg_factory}
+        self.router = Router(policy=policy, **kwargs)
         self.controllers: Dict[str, _RLControllerBase] = {}
         self.billing: Dict[str, BillingRecord] = {}
         # incremental billing cursors: exec-log offset per deployment and
@@ -64,14 +68,26 @@ class PlexCluster:
         for g in range(n_groups):
             self.router.state_managers[g] = StateManager(
                 node_id=f"group{g}", clock=self.router.now)
+        # the live control plane: online profiler + automatic placement +
+        # capacity adjustment over this router's node groups
+        self.director = PlacementDirector(self.router, cfg=director_cfg,
+                                          initial_groups=range(n_groups))
 
     # ------------------------------------------------------------- jobs
-    def add_job(self, cfg: JobConfig, group_id: int = 0,
+    def add_job(self, cfg: JobConfig, group_id: Optional[int] = 0,
                 algo: str = "grpo") -> _RLControllerBase:
         """Attach a job. Outside serve mode it is registered for the next
         :meth:`run`; against a live :meth:`serve` plane it starts making
         progress immediately on its own client thread (spawning a dispatch
-        worker for ``group_id`` if the group is new)."""
+        worker for ``group_id`` if the group is new).
+
+        ``group_id=None`` routes placement through the control plane: the
+        :class:`~repro.core.control_plane.PlacementDirector` cold-places the
+        job on a dedicated profiling group (spawning one if needed), then —
+        after one clean profiled cycle — re-fits it by micro-shift trace
+        fitting and migrates it onto a shared group automatically."""
+        if group_id is None:
+            group_id = self.director.assign(cfg.job_id)
         ctl = CONTROLLER_TYPES[algo](cfg, self.router, group_id=group_id)
         self.controllers[cfg.job_id] = ctl
         # a re-attached job keeps accruing on its existing bill — charges
@@ -118,6 +134,9 @@ class PlexCluster:
             # their first N ops
             for dep_id in dead:
                 self._billed_ops.pop(dep_id, None)
+        # control plane: release the job's placement and retire any group
+        # the departure left idle (no-op for jobs it never managed)
+        self.director.on_job_removed(job_id)
         return self.controllers.get(job_id)
 
     # ------------------------------------------------------------ serve
@@ -203,6 +222,9 @@ class PlexCluster:
                 with self._bill_lock:
                     rec.steps += 1
                     self._bill_from_logs()
+                # control-plane tick OUTSIDE the billing lock: it may block
+                # on a migration drain (profiling -> warm re-placement)
+                self.director.on_job_step(job_id)
 
             def client():
                 try:
@@ -252,6 +274,7 @@ class PlexCluster:
                      for j, c in active.items()}
         order = list(active)
         while any(v > 0 for v in remaining.values()):
+            stepped: List[str] = []
             for job_id in order:
                 if remaining[job_id] <= 0:
                     continue
@@ -259,8 +282,13 @@ class PlexCluster:
                 remaining[job_id] -= 1
                 if not interleave:
                     drive()
+                    self.director.on_job_step(job_id)
+                else:
+                    stepped.append(job_id)
             if interleave:
                 drive()
+                for job_id in stepped:
+                    self.director.on_job_step(job_id)
         drive()
         for f in tails:
             f.result()                # surface failed steps loudly
@@ -321,16 +349,12 @@ class PlexCluster:
 
     def migrate_job(self, job_id: str, src_group: int, dst_group: int):
         """Elastic re-placement: move a job's managed state across groups
-        (paper §4.5.3 cross-node migration)."""
-        src = self.router.state_managers[src_group]
-        dst = self.router.state_managers.setdefault(
-            dst_group, StateManager(node_id=f"group{dst_group}",
-                                    clock=self.router.now))
-        moved = 0
-        for dep_id, wpg in self.router.wpgs.items():
-            if wpg.spec.job_id != job_id:
-                continue
-            moved += src.migrate(wpg.job_prefix, dst)
-            wpg.sm = dst
-            self.router.group_of[dep_id] = dst_group
-        return moved
+        (paper §4.5.3 cross-node migration). Lives on the Router now; kept
+        here as the historical entry point."""
+        return self.router.migrate_job(job_id, src_group, dst_group)
+
+    def reassign_job(self, job_id: str, dst_group: int,
+                     timeout: float = 120.0) -> int:
+        """Live re-placement: drain the job's in-flight ops, migrate its
+        state, re-home its queued ops (billing stays continuous)."""
+        return self.router.reassign_job(job_id, dst_group, timeout=timeout)

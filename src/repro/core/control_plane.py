@@ -1,0 +1,404 @@
+"""Cluster control plane: online profiling, automatic placement, capacity
+adjustment (paper §4.3-§4.4).
+
+The :class:`PlacementDirector` closes the loop between three previously
+disconnected subsystems — the trace-fitting placement machinery
+(``scheduler/placement.py``, until now reachable only from the offline
+simulator), the live serve-mode dispatch plane (``router.py``), and state
+migration (``state_manager.py``) — so live jobs are *placed* instead of
+pinned to a hard-coded group:
+
+- **Online profiler.** The executor exports a per-job stream of
+  :class:`~repro.core.scheduler.executor.PhaseRecord` completions; the
+  director folds them into per-cycle phase durations (rollout /
+  compute_log_prob / update_actor / sync_weight) and, once a clean cycle
+  exists, into the same :class:`~repro.core.scheduler.placement.JobTrace`
+  the simulator consumes (§4.3.2 cold-start profiling).
+- **Cold → warm lifecycle.** A job arriving with no trace is placed on a
+  *dedicated* profiling group (``place_cold``; spawning one if none is
+  free). After ``cold_cycles`` clean cycles it is re-fitted with
+  ``place_warm`` micro-shift search — pack-first: groups already hosting
+  warm jobs are tried before empty ones, so profiling groups drain and can
+  be retired — and, if the fit lands elsewhere, *migrated* through
+  ``Router.reassign_job`` (hold → quiesce → StateManager.migrate → rehome,
+  §4.5.3) without losing billing continuity.
+- **Capacity adjuster** (§4.4). Queue-depth / occupancy telemetry from
+  ``Router.group_telemetry`` drives group spawn (``Router.ensure_group`` +
+  the serve plane's dynamic per-group worker spawn) and retire
+  (``Router.retire_group``), bounded by ``min_groups`` / ``max_groups``.
+
+Everything is event-driven from job arrivals and step completions (no
+background timer thread), so the whole decision sequence is deterministic
+under a :class:`~repro.core.scheduler.executor.VirtualClock` and replayable
+bit-identically; ``events`` is the append-only decision log tests and
+operators read.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.scheduler.executor import TaskExecutor  # noqa: F401 (docs)
+from repro.core.scheduler.intervals import IntervalSet
+from repro.core.scheduler.placement import (JobTrace, NodeGroup, Placed,
+                                            PlacementConfig, PlacementPolicy)
+
+# Executor op value -> profiled phase (paper Table 2 cycle anatomy).
+PHASE_OF_OP = {
+    "generate": "rollout",
+    "forward": "compute_log_prob",
+    "update_actor": "update_actor",
+    "forward_backward": "update_actor",
+    "optim_step": "update_actor",
+    "sync_weights": "sync_weight",
+}
+TRAIN_PHASES = ("compute_log_prob", "update_actor", "sync_weight")
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectorConfig:
+    horizon: float = 600.0          # rolling planning window (seconds)
+    max_cycles: int = 64            # cap on pre-allocated warm cycles
+    cold_cycles: int = 1            # clean cycles before the warm re-fit
+    warmup_cycles: int = 1          # leading cycles DROPPED from the fold
+    #   (the first cycle carries JIT compilation / cache warming and would
+    #   poison the steady-state trace; set 0 for exact-replay tests)
+    cold_reserve_s: float = 60.0    # dedicated-group reservation length
+    group_nodes: int = 1            # node count of spawned groups
+    min_groups: int = 1
+    max_groups: int = 32
+    spawn_queue_depth: int = 8      # per-group QUEUED depth triggering spawn
+    placement: Optional[PlacementConfig] = None
+
+
+@dataclasses.dataclass
+class _JobState:
+    job_id: str
+    nodes: int
+    phase: str = "cold"             # "cold" (profiling) | "warm" (fitted)
+    group_id: int = -1
+    seq_cursor: int = 0             # last consumed PhaseRecord.seq
+    open_cycle: Dict[str, float] = dataclasses.field(default_factory=dict)
+    cycles: List[Dict[str, float]] = dataclasses.field(default_factory=list)
+    trace: Optional[JobTrace] = None
+
+
+def trace_from_cycles(cycles: Sequence[Dict[str, float]],
+                      nodes: int = 1) -> Optional[JobTrace]:
+    """Fold per-cycle phase durations into a JobTrace (mean per phase, the
+    same anatomy as ``traces.Profiler.trace``: training segments
+    back-to-back after the rollout gap)."""
+    mean: Dict[str, float] = {}
+    for phase in ("rollout",) + TRAIN_PHASES:
+        vals = [c[phase] for c in cycles if phase in c]
+        if vals:
+            mean[phase] = sum(vals) / len(vals)
+    if "rollout" not in mean or "update_actor" not in mean:
+        return None
+    t = mean["rollout"]
+    segs = []
+    for p in TRAIN_PHASES:
+        if p in mean:
+            segs.append((t, mean[p]))
+            t += mean[p]
+    if t <= 1e-9:
+        return None                 # degenerate (clock never advanced)
+    return JobTrace(period=t, segments=tuple(segs), nodes=nodes)
+
+
+class PlacementDirector:
+    """Live placement + capacity control over a Router's node groups.
+
+    Thread-safe: client threads call :meth:`assign` / :meth:`on_job_step` /
+    :meth:`on_job_removed` concurrently; one re-entrant lock serializes
+    decisions (the underlying Router/executor operations take their own
+    locks)."""
+
+    def __init__(self, router, cfg: Optional[DirectorConfig] = None,
+                 initial_groups: Sequence[int] = ()):
+        self.router = router
+        self.cfg = cfg or DirectorConfig()
+        pcfg = self.cfg.placement or PlacementConfig(horizon=self.cfg.horizon)
+        self.policy = PlacementPolicy([], pcfg)
+        self._lock = threading.RLock()
+        self._jobs: Dict[str, _JobState] = {}
+        self.events: List[dict] = []
+        for g in initial_groups:
+            self.register_group(g)
+
+    # Decision-log retention: decisions are per job-lifecycle (not
+    # per-step), but a long-lived plane with heavy job churn still accretes
+    # — keep the most recent window.
+    MAX_EVENTS = 4096
+
+    # ------------------------------------------------------------- helpers
+    def _log(self, event: str, **kw):
+        self.events.append(dict(event=event, **kw))
+        if len(self.events) > self.MAX_EVENTS:
+            del self.events[:len(self.events) - self.MAX_EVENTS]
+
+    def job_state(self, job_id: str) -> Optional[_JobState]:
+        with self._lock:
+            return self._jobs.get(job_id)
+
+    def profiled_trace(self, job_id: str) -> Optional[JobTrace]:
+        with self._lock:
+            js = self._jobs.get(job_id)
+            return js.trace if js else None
+
+    def register_group(self, group_id: int):
+        """Track an externally created group (e.g. the cluster's seed
+        groups) in the placement state."""
+        with self._lock:
+            if self.policy.group(group_id) is not None:
+                return
+            now = self.router.now()
+            self.policy.add_group(NodeGroup(
+                group_id, self.cfg.group_nodes,
+                IntervalSet([(now, now + self.cfg.horizon)]),
+                horizon_end=now + self.cfg.horizon))
+
+    def _spawn_group(self, now: float, reason: str) -> int:
+        known = set(self.router.known_groups()) | \
+            {g.group_id for g in self.policy.groups}
+        gid = max(known, default=-1) + 1
+        self.router.ensure_group(gid)
+        self.policy.add_group(NodeGroup(
+            gid, self.cfg.group_nodes,
+            IntervalSet([(now, now + self.cfg.horizon)]),
+            horizon_end=now + self.cfg.horizon))
+        self._log("spawn_group", group=gid, reason=reason, t=now)
+        return gid
+
+    def _advance(self, now: float):
+        """Roll every group's planning window: retire capacity behind
+        ``now``, project resident jobs into the extended horizon."""
+        for g in self.policy.groups:
+            g.advance_to(now)
+            g.extend_to(now + self.cfg.horizon)
+
+    # ------------------------------------------------------------- arrival
+    def assign(self, job_id: str, nodes: int = 1,
+               expected_duration: Optional[float] = None) -> int:
+        """Place an arriving (trace-less) job: a dedicated profiling group,
+        spawning one if none is free (§4.3.2 cold start). Returns the
+        group_id the caller should deploy onto."""
+        with self._lock:
+            if job_id in self._jobs:
+                return self._jobs[job_id].group_id
+            now = self.router.now()
+            self._advance(now)
+            dur = min(expected_duration or self.cfg.cold_reserve_s,
+                      self.cfg.horizon * 0.5)
+            placed = self.policy.place_cold(job_id, nodes, dur, origin=now)
+            if placed is None and len(self.policy.groups) < self.cfg.max_groups:
+                self._spawn_group(now, reason=f"cold:{job_id}")
+                placed = self.policy.place_cold(job_id, nodes, dur,
+                                                origin=now)
+            if placed is None:
+                # fleet at max size and no clean group: profile on the group
+                # with the fewest residents (profiling is noisier, not wrong)
+                g = min(self.policy.groups,
+                        key=lambda g: (len(g.resident), g.group_id))
+                gid = g.group_id
+                self._log("cold_overflow", job=job_id, group=gid, t=now)
+            else:
+                gid = placed.group_id
+                self._log("cold_place", job=job_id, group=gid, t=now)
+            self._jobs[job_id] = _JobState(job_id, nodes, "cold", gid)
+            return gid
+
+    # ---------------------------------------------------------- telemetry
+    def _fold(self, js: _JobState):
+        """Consume the job's new PhaseRecords: carve live completions out of
+        group free windows and accumulate per-cycle phase durations."""
+        recs = self.router.executor.phase_records_since(js.job_id,
+                                                        js.seq_cursor)
+        for r in recs:
+            js.seq_cursor = max(js.seq_cursor, r.seq)
+            g = self.policy.group(r.group_id)
+            if g is not None:
+                g.note_busy(r.t_started, r.t_finished)
+            phase = PHASE_OF_OP.get(r.op)
+            if phase is None:
+                continue
+            if (phase == "rollout" and "rollout" in js.open_cycle
+                    and "update_actor" in js.open_cycle):
+                js.cycles.append(js.open_cycle)   # next cycle's rollout
+                js.open_cycle = {}
+            js.open_cycle[phase] = js.open_cycle.get(phase, 0.0) + r.duration
+        # a completed step means the open cycle (if whole) is closed
+        if "rollout" in js.open_cycle and "update_actor" in js.open_cycle:
+            js.cycles.append(js.open_cycle)
+            js.open_cycle = {}
+        # bounded history: promotion reads warmup+cold cycles; keep a small
+        # tail beyond that (future drift re-profiling) so a week-long warm
+        # job does not accumulate one dict per step forever
+        keep = self.cfg.warmup_cycles + self.cfg.cold_cycles + 8
+        if len(js.cycles) > keep and js.phase != "cold":
+            del js.cycles[:len(js.cycles) - keep]
+
+    # ----------------------------------------------------------- lifecycle
+    def on_job_step(self, job_id: str):
+        """Per-step hook (event-driven; deterministic under VirtualClock):
+        fold telemetry, promote cold→warm once profiled, adjust capacity.
+
+        The blocking half of a promotion — the migration's admission-hold
+        drain — runs OUTSIDE the director lock, so one job's migration
+        never stalls other jobs' step hooks or new-job placement; the
+        placement state itself is already updated before the lock drops."""
+        migration = None
+        with self._lock:
+            js = self._jobs.get(job_id)
+            if js is None:
+                return
+            now = self.router.now()
+            self._advance(now)
+            self._fold(js)
+            if (js.phase == "cold"
+                    and len(js.cycles) >= (self.cfg.warmup_cycles
+                                           + self.cfg.cold_cycles)):
+                migration = self._promote(js, now)
+            if migration is None:
+                self._adjust_capacity(now)
+                return
+        src, dst = migration
+        try:
+            moved = self.router.reassign_job(job_id, dst)  # blocking drain
+        except Exception as e:  # noqa: BLE001 - migration is an optimization
+            # e.g. a quiesce timeout behind a long-running op: the job still
+            # runs on src. Roll the placement state back (free the dst
+            # reservation, re-pin src) and keep driving the job — a failed
+            # consolidation move must never kill a healthy job.
+            with self._lock:
+                now = self.router.now()
+                js = self._jobs.get(job_id)
+                self.policy.remove(job_id)
+                if js is not None:
+                    js.group_id = src
+                    if js.trace is not None:
+                        self.policy.place_warm(job_id, js.trace,
+                                               origin=now, groups=[src])
+                self._log("migrate_failed", job=job_id, src=src, dst=dst,
+                          error=str(e), t=now)
+            return
+        with self._lock:
+            now = self.router.now()
+            self._log("migrate", job=job_id, src=src, dst=dst,
+                      bytes=moved, t=now)
+            self._adjust_capacity(now)   # retires the drained group
+
+    def _promote(self, js: _JobState,
+                 now: float) -> Optional[Tuple[int, int]]:
+        """Cold→warm: build the profiled trace, micro-shift fit it
+        (pack-first). Returns the (src, dst) migration the caller must
+        realize when the fit lands on another group, else None."""
+        trace = trace_from_cycles(js.cycles[self.cfg.warmup_cycles:],
+                                  js.nodes)
+        if trace is None:
+            return None
+        self.policy.remove(js.job_id)      # release the cold reservation
+        placed = self._fit_warm(js.job_id, trace, now)
+        js.trace = trace
+        js.phase = "warm"
+        if placed is None:
+            self._log("unplaceable", job=js.job_id, group=js.group_id,
+                      period=trace.period, t=now)
+            return None
+        old_gid = js.group_id
+        js.group_id = placed.group_id
+        self._log("warm_place", job=js.job_id, group=placed.group_id,
+                  shift=placed.shift, period=trace.period,
+                  duty=trace.duty(), t=now)
+        if placed.group_id != old_gid:
+            return (old_gid, placed.group_id)
+        return None
+
+    def _fit_warm(self, job_id: str, trace: JobTrace,
+                  now: float) -> Optional[Placed]:
+        n_cycles = max(1, min(self.cfg.max_cycles,
+                              int(self.cfg.horizon
+                                  // max(trace.period, 1e-9))))
+        cold_groups = {s.group_id for s in self._jobs.values()
+                       if s.phase == "cold" and s.job_id != job_id}
+        # pack-first: consolidate onto groups already hosting warm jobs so
+        # drained profiling groups become retirable (repacking density,
+        # §4.3.2) — then the remaining (resident-free) non-profiling
+        # groups, then a fresh spawn
+        tiers = [
+            [g.group_id for g in self.policy.groups
+             if g.resident and g.group_id not in cold_groups],
+            [g.group_id for g in self.policy.groups
+             if not g.resident and g.group_id not in cold_groups],
+        ]
+        for tier in tiers:
+            if not tier:
+                continue
+            placed = self.policy.place_warm(job_id, trace,
+                                            n_cycles=n_cycles,
+                                            origin=now, groups=tier)
+            if placed is not None:
+                return placed
+        if len(self.policy.groups) < self.cfg.max_groups:
+            gid = self._spawn_group(now, reason=f"warm:{job_id}")
+            return self.policy.place_warm(job_id, trace, n_cycles=n_cycles,
+                                          origin=now, groups=[gid])
+        return None
+
+    def on_job_removed(self, job_id: str):
+        with self._lock:
+            js = self._jobs.pop(job_id, None)
+            self.policy.remove(job_id)
+            self.router.executor.drop_job_telemetry(job_id)
+            now = self.router.now()
+            if js is not None:
+                self._log("job_removed", job=job_id, t=now)
+            self._retire_idle(now)
+
+    # ------------------------------------------------- capacity adjustment
+    def poll(self):
+        """Explicit capacity-adjustment tick (the event hooks call this
+        implicitly; exposed for external control loops)."""
+        with self._lock:
+            now = self.router.now()
+            self._advance(now)
+            self._adjust_capacity(now)
+
+    def _adjust_capacity(self, now: float):
+        telem = self.router.group_telemetry()
+        deep = sorted(g for g, t in telem.items()
+                      if t["queue_depth"] >= self.cfg.spawn_queue_depth)
+        if deep:
+            # queue pressure: keep (or create) one spare group rather than
+            # retiring — the next warm fit / repack can expand onto it
+            if len(self.policy.groups) < self.cfg.max_groups:
+                spare = [g for g in self.policy.groups
+                         if not g.resident and not telem.get(
+                             g.group_id, {}).get("deployments")]
+                if not spare:
+                    self._spawn_group(now, reason=f"queue_depth:g{deep[0]}")
+        else:
+            self._retire_idle(now, telem)
+
+    def _retire_idle(self, now: float, telem: Optional[Dict] = None):
+        """Retire groups with no placed jobs, no deployments, and no queued
+        or running work (down to ``min_groups``)."""
+        if telem is None:
+            telem = self.router.group_telemetry()
+        for gid in sorted((g.group_id for g in self.policy.groups),
+                          reverse=True):
+            if len(self.policy.groups) <= self.cfg.min_groups:
+                break
+            g = self.policy.group(gid)
+            if g is None or g.resident:
+                continue
+            t = telem.get(gid)
+            if t and (t["deployments"] or t["queue_depth"] or t["running"]):
+                continue
+            try:
+                self.router.retire_group(gid)
+            except RuntimeError:
+                continue               # raced an attach: leave it alone
+            self.policy.remove_group(gid)
+            self._log("retire_group", group=gid, t=now)

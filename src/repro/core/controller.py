@@ -83,7 +83,8 @@ class _RLControllerBase:
     def submit_init(self) -> api.Future:
         return self.dep.init(self.cfg.seed, exec_estimate=1.0)
 
-    def _pack(self, prompts, answers, gen_result) -> Dict[str, "np.ndarray"]:
+    def _pack(self, prompts, answers, gen_result,
+              include_rewards: bool = False) -> Dict[str, "np.ndarray"]:
         import jax.numpy as jnp
         toks = np.asarray(gen_result["tokens"])
         logps = np.asarray(gen_result["logprobs"])
@@ -93,7 +94,10 @@ class _RLControllerBase:
         batch = data_lib.pack_rollout_batch(
             prompts, toks, logps, rewards,
             self.cfg.group_size, self.cfg.seq_len)
-        return {k: jnp.asarray(v) for k, v in batch.items()}
+        out = {k: jnp.asarray(v) for k, v in batch.items()}
+        if include_rewards:           # critic value targets need raw rewards
+            out["rewards"] = jnp.asarray(rewards)
+        return out
 
     def _gate(self) -> tuple:
         """One-step-async staleness gate (§6.3): generation of step k waits
@@ -207,17 +211,61 @@ class RLControllerGRPO(_RLControllerBase):
 
 
 class RLControllerPPO(_RLControllerBase):
-    """PPO over the same service API, with the fused update split into the
-    primitive ops (paper Tab. 2): GENERATE -> FORWARD (behavior logprobs
-    recomputed under the current policy) -> FORWARD_BACKWARD (rl/ppo.py's
-    clipped surrogate) -> OPTIM_STEP. The four-op chain — including the
-    ``gather`` join of the packed batch with the forward pass — exercises
-    every dataflow primitive, demonstrating that the client API is not
-    GRPO-shaped."""
+    """PPO over the same service API as a true TWO-ROLE job: an actor
+    (role="train") plus a critic deployment (role="critic", the value head
+    of rl/ppo.py), with the fused update split into the primitive ops
+    (paper Tab. 2): GENERATE -> FORWARD (behavior logprobs) + critic
+    FORWARD (values) -> GAE advantages (client-side transform) -> actor
+    FORWARD_BACKWARD (clipped surrogate) + OPTIM_STEP -> cross-deployment
+    SYNC_WEIGHTS re-basing the critic onto the updated actor backbone ->
+    critic FORWARD_BACKWARD (clipped value loss) + OPTIM_STEP on top of the
+    fresh backbone (sync-before-update, so the value step is never
+    clobbered). The chain — including the ``gather`` joins — exercises
+    every dataflow primitive and the cross-deployment weight-sync path,
+    demonstrating that the client API is not GRPO-shaped."""
+
+    def __init__(self, cfg: JobConfig, router: Router, group_id: int = 0):
+        super().__init__(cfg, router, group_id=group_id)
+        from repro.rl import ppo as ppo_lib
+        self.ppo_cfg = ppo_lib.PPOConfig()
+        self.critic_spec = api.DeploymentSpec(
+            deployment_id=f"{cfg.job_id}-critic", job_id=cfg.job_id,
+            model_name=cfg.model_name, role="critic",
+            overrides=cfg.overrides)
+        self.critic: api.Deployment = router.deploy(self.critic_spec,
+                                                    group_id=group_id)
+
+    def submit_init(self) -> api.Future:
+        return api.gather(super().submit_init(),
+                          self.critic.init(self.cfg.seed, exec_estimate=1.0))
+
+    def _merge_ppo(self, triple):
+        """Client-side join: behavior logprobs + critic values -> GAE
+        advantages and clipped-value-loss targets."""
+        import jax.numpy as jnp
+        from repro.rl import ppo as ppo_lib
+        batch, logp, values = triple
+        toks = np.asarray(batch["tokens"])
+        behave = np.zeros(toks.shape, np.float32)
+        behave[:, 1:] = np.asarray(logp, np.float32)
+        vals = np.asarray(values, np.float32)             # (B, S)
+        mask = np.asarray(batch["loss_mask"], np.float32)
+        rewards = np.asarray(batch["rewards"], np.float32)  # (B,)
+        # terminal verifiable reward at the last response token
+        r_seq = np.zeros(toks.shape, np.float32)
+        last = (mask * np.arange(toks.shape[1])).argmax(axis=1)
+        r_seq[np.arange(toks.shape[0]), last] = rewards
+        adv = np.asarray(ppo_lib.gae_advantages(
+            jnp.asarray(r_seq), jnp.asarray(vals), jnp.asarray(mask),
+            self.ppo_cfg))
+        return dict(batch,
+                    behavior_logprobs=jnp.asarray(behave),
+                    advantages=jnp.asarray(adv),          # token-level
+                    value_targets=jnp.asarray(adv + vals),
+                    old_values=jnp.asarray(vals))
 
     def submit_step(self, gen_estimate: float = 1.0,
                     train_estimate: float = 1.0) -> List[api.Future]:
-        import jax.numpy as jnp
         cfg = self.cfg
         prompts, problems = next(self.batches)
         answers = [p.answer for p in problems]
@@ -226,30 +274,42 @@ class RLControllerPPO(_RLControllerBase):
                                   exec_estimate=gen_estimate,
                                   after=self._gate())
         batch_f = gen_f.then(
-            lambda res: self._pack(prompts, answers, res))
+            lambda res: self._pack(prompts, answers, res,
+                                   include_rewards=True))
         # fresh behavior logprobs under the pre-update policy (standard PPO:
-        # the first ratio is exactly 1) as a scheduled FORWARD op
+        # the first ratio is exactly 1) and critic values, as scheduled
+        # FORWARD ops on the two roles
         logp_f = self.dep.forward(batch_f, exec_estimate=train_estimate)
-
-        def _merge(pair):
-            batch, logp = pair
-            behave = np.zeros(np.asarray(batch["tokens"]).shape, np.float32)
-            behave[:, 1:] = np.asarray(logp, np.float32)
-            return dict(batch, behavior_logprobs=jnp.asarray(behave))
-
-        merged_f = api.gather(batch_f, logp_f).then(_merge)
+        vals_f = self.critic.forward(batch_f, output="values",
+                                     exec_estimate=train_estimate)
+        merged_f = api.gather(batch_f, logp_f, vals_f).then(self._merge_ppo)
         fb_f = self.dep.forward_backward(merged_f, objective="ppo",
                                          exec_estimate=train_estimate)
         opt_f = self.dep.optim_step(fb_f.then(lambda r: r["grads"]),
                                     exec_estimate=train_estimate)
-        self._updates[self._step_idx] = opt_f
+        # cross-deployment SYNC_WEIGHTS: once the actor updated, re-base
+        # the critic onto the new backbone (shared-backbone PPO), THEN
+        # apply the value step on top — sync-before-update, so the value
+        # gradient is never clobbered and the critic ends every cycle as
+        # "fresh actor backbone + one value step". (vals_f already ran:
+        # old_values were read under the pre-step critic.)
+        sync_f = self.dep.sync_weights(self.critic,
+                                       exec_estimate=train_estimate,
+                                       after=(opt_f,))
+        vfb_f = self.critic.forward_backward(merged_f, objective="value",
+                                             exec_estimate=train_estimate,
+                                             after=(sync_f,))
+        vopt_f = self.critic.optim_step(vfb_f.then(lambda r: r["grads"]),
+                                        exec_estimate=train_estimate)
+        self._updates[self._step_idx] = vopt_f
 
-        def _record(pair):
-            fb, opt_res = pair
+        def _record(triple):
+            fb, opt_res, vfb = triple
             metrics = {k: float(v) for k, v in fb["metrics"].items()}
+            metrics["value_loss"] = float(vfb["metrics"]["value_loss"])
             metrics.update(opt_res)
             return self._record_metrics(metrics)
 
-        metrics_f = api.gather(fb_f, opt_f).then(_record)
+        metrics_f = api.gather(fb_f, opt_f, vfb_f).then(_record)
         self._step_idx += 1
-        return [metrics_f]
+        return [metrics_f, vopt_f]

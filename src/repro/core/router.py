@@ -73,9 +73,11 @@ class Router:
         # exceptions raised by user callbacks during future resolution; a
         # broken callback must not kill a dispatch thread mid-protocol
         self.callback_errors: List[Tuple[int, BaseException]] = []
-        # persistent serve-mode plane
+        # persistent serve-mode plane: one stop token per group worker (so
+        # retire_group can tear one down) plus the plane-wide shutdown token
         self._serving = False
         self._serve_stop = threading.Event()
+        self._serve_stops: Dict[int, threading.Event] = {}
         self._serve_threads: Dict[int, threading.Thread] = {}
         self._serve_executed: Dict[int, List[int]] = {}
         self._serve_err_start = 0
@@ -437,11 +439,11 @@ class Router:
                 return
             if group_id in self._serve_threads:
                 return
-            counter = [0]
-            self._serve_executed[group_id] = counter
+            counter = self._serve_executed.setdefault(group_id, [0])
+            stop = self._serve_stops[group_id] = threading.Event()
             t = threading.Thread(
                 target=self._worker_loop,
-                args=(group_id, self._serve_stop, True, counter, 0),
+                args=(group_id, stop, True, counter, 0),
                 name=f"serve-g{group_id}", daemon=True)
             self._serve_threads[group_id] = t
         t.start()
@@ -455,6 +457,7 @@ class Router:
             if self._serving:
                 raise RuntimeError("already serving")
             self._serve_stop = threading.Event()
+            self._serve_stops = {}
             self._serve_threads = {}
             self._serve_executed = {}
             self._serve_err_start = len(self.callback_errors)
@@ -472,6 +475,8 @@ class Router:
             return
         self._serve_stop.set()
         with self.executor.cv:
+            for stop in self._serve_stops.values():
+                stop.set()
             self.executor.cv.notify_all()
         deadline = None if timeout is None else time.monotonic() + timeout
         for t in self._serve_threads.values():
@@ -480,6 +485,7 @@ class Router:
         with self.executor.cv:
             self._serving = False
             self._serve_threads = {}
+            self._serve_stops = {}
         self._raise_callback_errors(self._serve_err_start)
 
     def __enter__(self) -> "Router":
@@ -507,6 +513,151 @@ class Router:
                 lambda: ex.outstanding() == 0 and ex.inflight == 0, timeout)
         if not ok:
             raise TimeoutError(f"plane not idle within {timeout}s")
+
+    # ------------------------------------------- group lifecycle / telemetry
+    def known_groups(self) -> List[int]:
+        with self.executor.cv:
+            return sorted(set(self.group_of.values())
+                          | set(self.state_managers)
+                          | set(self._serve_threads))
+
+    def ensure_group(self, group_id: int) -> StateManager:
+        """Register a node group with the control plane (capacity-adjustment
+        spawn, §4.4): its StateManager exists from here on, and while serving
+        a dispatch worker is spawned so deployments placed on it are admitted
+        the moment they arrive."""
+        with self.executor.cv:
+            sm = self.state_managers.setdefault(
+                group_id, StateManager(node_id=f"group{group_id}",
+                                       clock=self.now))
+            serving = self._serving
+        if serving:
+            self._ensure_serve_worker(group_id)
+        return sm
+
+    def retire_group(self, group_id: int, timeout: float = 30.0):
+        """Capacity-adjustment retire: tear down one group's dispatch worker
+        (symmetric to the dynamic spawn in :meth:`create_deployment`) and
+        forget its scheduling state. Refuses while the group still hosts
+        deployments or open tasks."""
+        ex = self.executor
+        with ex.cv:
+            live = [d for d, g in self.group_of.items() if g == group_id]
+            if live:
+                raise RuntimeError(
+                    f"group {group_id} still hosts deployments {live}")
+            stuck = [t.request.req_id for t in ex.tasks.values()
+                     if t.group_id == group_id
+                     and t.state in (State.QUEUED, State.RUNNING)]
+            if stuck:
+                raise RuntimeError(
+                    f"group {group_id} still has open tasks {stuck}")
+            t = self._serve_threads.pop(group_id, None)
+            stop = self._serve_stops.pop(group_id, None)
+            if stop is not None:
+                stop.set()
+            ex.cv.notify_all()
+        if t is not None:
+            t.join(timeout=timeout)
+            if t.is_alive():
+                raise RuntimeError(
+                    f"group {group_id} worker did not exit in {timeout}s")
+        try:
+            ex.drop_group(group_id)
+        except RuntimeError:
+            # an attach raced the teardown and submitted work: put the
+            # dispatch worker back so the new deployment is not stranded
+            if self._serving:
+                self._ensure_serve_worker(group_id)
+            raise
+        with ex.cv:
+            # re-check under the lock: an attach that raced past drop_group
+            # owns the group again — leave its (empty) StateManager alone
+            if not any(g == group_id for g in self.group_of.values()):
+                sm = self.state_managers.get(group_id)
+                if sm is not None and not sm.entries:
+                    del self.state_managers[group_id]
+
+    def group_telemetry(self) -> Dict[int, dict]:
+        """Per-group queue-depth / occupancy snapshot (the §4.4 capacity
+        adjuster's input). Keys: queue_depth (QUEUED ops), running (op
+        currently holding the group lock), busy_seconds (cumulative measured
+        execution), resident_job, deployments, worker (live serve thread)."""
+        ex = self.executor
+        with ex.cv:
+            groups = (set(self.group_of.values()) | set(self.state_managers)
+                      | set(self._serve_threads))
+            out: Dict[int, dict] = {}
+            for g in sorted(groups):
+                lock = ex.locks.get(g)
+                out[g] = {
+                    "queue_depth": ex.queued_count.get(g, 0),
+                    "running": bool(lock and lock.holder is not None),
+                    "busy_seconds": ex.group_busy.get(g, 0.0),
+                    "resident_job": ex.resident_job.get(g),
+                    "deployments": sorted(
+                        d for d, gg in self.group_of.items() if gg == g),
+                    "worker": g in self._serve_threads,
+                }
+        return out
+
+    # ------------------------------------------------- elastic re-placement
+    def migrate_job(self, job_id: str, src_group: int, dst_group: int) -> int:
+        """Move a job's managed state across groups (paper §4.5.3). Callers
+        quiesce + admission-hold the job first (see :meth:`reassign_job`).
+        The bulk byte copy runs OUTSIDE the executor lock — a multi-GB
+        migration must not stall dispatch on every other group — which is
+        safe because the held job's entries are not unregistered by anyone
+        (a concurrent switch may at worst offload them tier-wise, and
+        ``StateManager.migrate`` reads either tier consistently); only the
+        map swaps (wpg.sm, group_of, resident flag) take the lock."""
+        with self.executor.cv:
+            src = self.state_managers[src_group]
+            dst = self.state_managers.setdefault(
+                dst_group, StateManager(node_id=f"group{dst_group}",
+                                        clock=self.now))
+            targets = [(d, w) for d, w in self.wpgs.items()
+                       if w.spec.job_id == job_id]
+        moved = 0
+        for _, wpg in targets:
+            moved += src.migrate(wpg.job_prefix, dst)
+        with self.executor.cv:
+            for dep_id, wpg in targets:
+                wpg.sm = dst
+                self.group_of[dep_id] = dst_group
+            if self.executor.resident_job.get(src_group) == job_id:
+                self.executor.resident_job[src_group] = None
+        return moved
+
+    def reassign_job(self, job_id: str, dst_group: int,
+                     timeout: float = 120.0) -> int:
+        """Realize a re-placement decision against the live plane: hold the
+        job's admissions, wait for its RUNNING ops to drain, migrate managed
+        state, re-home its queued ops onto the destination group, release.
+        Billing continuity is free — exec logs live on the WPGs (which
+        survive) and the billing cursors are keyed by deployment id."""
+        ex = self.executor
+        ex.hold_job(job_id)
+        try:
+            with ex.cv:
+                ok = ex.cv.wait_for(lambda: not ex.job_running(job_id),
+                                    timeout)
+            if not ok:
+                raise TimeoutError(
+                    f"job {job_id} did not quiesce within {timeout}s")
+            with ex.cv:
+                src_groups = {g for d, g in self.group_of.items()
+                              if self.deployments[d].job_id == job_id}
+            moved = 0
+            for src in src_groups:
+                if src != dst_group:
+                    moved += self.migrate_job(job_id, src, dst_group)
+            if self._serving:
+                self._ensure_serve_worker(dst_group)
+            ex.rehome_job(job_id, dst_group)
+        finally:
+            ex.release_job(job_id)
+        return moved
 
     # -------------------------------------------------- bounded driver
     def run_until_idle(self, timeout: Optional[float] = None) -> int:

@@ -24,10 +24,11 @@ block instead of polling.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import enum
 import threading
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 from repro.core.scheduler import hrrs
 from repro.core.scheduler.admission_index import GroupAdmissionIndex
@@ -50,6 +51,21 @@ class Task:
     t_started: float = 0.0
     t_finished: float = 0.0
     error: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseRecord:
+    """One completed operation's timing, exported for the online profiler
+    (paper §4.3.2: the control plane folds these into a per-job JobTrace)."""
+    seq: int                           # global monotonic completion ordinal
+    op: str                            # api.Op value ("generate", ...)
+    group_id: int
+    t_started: float
+    t_finished: float
+
+    @property
+    def duration(self) -> float:
+        return self.t_finished - self.t_started
 
 
 class VirtualClock:
@@ -102,7 +118,8 @@ class GroupLock:
 class TaskExecutor:
     def __init__(self, now: Callable[[], float],
                  t_load: float = 0.0, t_offload: float = 0.0,
-                 policy: str = "hrrs", use_admission_index: bool = True):
+                 policy: str = "hrrs", use_admission_index: bool = True,
+                 max_settled_tasks: int = 4096, phase_window: int = 256):
         self.now = now
         self.t_load = t_load
         self.t_offload = t_offload
@@ -139,6 +156,33 @@ class TaskExecutor:
         self._indexes: Dict[int, GroupAdmissionIndex] = {}
         # prereq req_id -> dependents whose readiness flips when it settles
         self._dependents: Dict[int, List[int]] = {}
+        # Bounded retention of settled Task records (telemetry): settled
+        # req_ids enter a FIFO ring; beyond ``max_settled_tasks`` the oldest
+        # are dropped from ``tasks`` so a week-long serve plane does not grow
+        # memory without bound. FAILED records are pinned while a poison
+        # sweep may still need their error (poison_dirty).
+        self.max_settled_tasks = max_settled_tasks
+        self._settled: Deque[int] = collections.deque()
+        # FAILED records get their own ring of the same capacity: a late
+        # dependent submitted against a pruned FAILED prerequisite would
+        # lose its poisoning (unknown prereq ids count as satisfied), so
+        # error records are retained for max_settled_tasks *failures*
+        # rather than settles — still bounded, far longer-lived
+        self._settled_failed: Deque[int] = collections.deque()
+        # Per-job phase telemetry for the control plane's online profiler
+        # (bounded per job; independent of Task retention).
+        self.phase_window = phase_window
+        self.phase_log: Dict[str, Deque[PhaseRecord]] = {}
+        self._phase_seq = 0
+        # Live per-group telemetry the capacity adjuster polls.
+        self.queued_count: Dict[int, int] = {}
+        self.group_busy: Dict[int, float] = {}
+        # per-job RUNNING counter: the migration quiesce predicate is
+        # re-evaluated on every cv notification, so it must be O(1)
+        self._running_count: Dict[str, int] = {}
+        # Jobs under a migration hold: their QUEUED ops are not admissible
+        # until release (the drain half of elastic re-placement, §4.5.3).
+        self.held_jobs: set = set()
 
     # -------------------------------------------------------------- index
     def _index_for(self, group_id: int) -> GroupAdmissionIndex:
@@ -170,6 +214,8 @@ class TaskExecutor:
             self.locks.setdefault(group_id, GroupLock())
             self.resident_job.setdefault(group_id, None)
             self._open += 1
+            self.queued_count[group_id] = \
+                self.queued_count.get(group_id, 0) + 1
             if any(p in self.tasks
                    and self.tasks[p].state == State.FAILED
                    for p in t.prerequisites):
@@ -197,9 +243,10 @@ class TaskExecutor:
 
     # ---------------------------------------------------------- admission
     def _ready(self, t: Task) -> bool:
-        return t.state == State.QUEUED and all(
-            self.tasks[p].state == State.COMPLETED
-            for p in t.prerequisites if p in self.tasks)
+        return (t.state == State.QUEUED
+                and t.request.job_id not in self.held_jobs
+                and all(self.tasks[p].state == State.COMPLETED
+                        for p in t.prerequisites if p in self.tasks))
 
     def failed_prereqs(self, t: Task) -> List[int]:
         return [p for p in t.prerequisites
@@ -272,6 +319,9 @@ class TaskExecutor:
             self.resident_job[task.group_id] = task.request.job_id
             task.state = State.RUNNING
             task.t_started = self.now()
+            self.queued_count[task.group_id] -= 1
+            job = task.request.job_id
+            self._running_count[job] = self._running_count.get(job, 0) + 1
             task.request.running = True
             task.request.remaining_time = task.request.exec_time
             if self.use_admission_index:
@@ -282,10 +332,32 @@ class TaskExecutor:
     def finish(self, task: Task, error: Optional[str] = None):
         with self.cv:
             was_open = task.state in (State.QUEUED, State.RUNNING)
+            if task.state == State.QUEUED:
+                self.queued_count[task.group_id] -= 1
+            ran = task.state == State.RUNNING
+            if ran:
+                job = task.request.job_id
+                left = self._running_count.get(job, 1) - 1
+                if left <= 0:
+                    self._running_count.pop(job, None)
+                else:
+                    self._running_count[job] = left
             task.state = State.FAILED if error else State.COMPLETED
             task.error = error
             task.t_finished = self.now()
             task.request.running = False
+            if ran and not error:
+                dt = task.t_finished - task.t_started
+                self.group_busy[task.group_id] = \
+                    self.group_busy.get(task.group_id, 0.0) + dt
+                self._phase_seq += 1
+                log = self.phase_log.get(task.request.job_id)
+                if log is None:
+                    log = self.phase_log[task.request.job_id] = \
+                        collections.deque(maxlen=self.phase_window)
+                log.append(PhaseRecord(self._phase_seq, task.request.op,
+                                       task.group_id, task.t_started,
+                                       task.t_finished))
             # The Task record is kept for telemetry (states, timings), but
             # the operation payload (args may hold whole rollout batches) is
             # only reachable through the future from here on — retaining it
@@ -319,7 +391,122 @@ class TaskExecutor:
                             pass
                         if not waiters:
                             del self._dependents[p]
+            self._settled.append(task.request.req_id)
+            self._prune_settled()
             self.cv.notify_all()
+
+    def _prune_settled(self):
+        """Age out the oldest settled Task records beyond the retention cap
+        (must hold cv). A FAILED record is pinned while a poison sweep may
+        still need its error (``poison_dirty``); once swept it moves to the
+        failed ring, which evicts per-failure rather than per-settle."""
+        while len(self._settled) > self.max_settled_tasks:
+            req_id = self._settled[0]
+            t = self.tasks.get(req_id)
+            if t is None:
+                self._settled.popleft()
+                continue
+            if t.state == State.FAILED:
+                if self.poison_dirty:
+                    break
+                self._settled.popleft()
+                self._settled_failed.append(req_id)
+                continue
+            self._settled.popleft()
+            self.tasks.pop(req_id, None)
+        while len(self._settled_failed) > self.max_settled_tasks:
+            self.tasks.pop(self._settled_failed.popleft(), None)
+
+    # ------------------------------------------- migration / group lifecycle
+    def hold_job(self, job_id: str):
+        """Admission hold (the drain half of elastic re-placement): the
+        job's QUEUED ops stop being admissible until :meth:`release_job`.
+        Already-RUNNING ops complete normally."""
+        with self.cv:
+            if job_id in self.held_jobs:
+                return
+            self.held_jobs.add(job_id)
+            if self.use_admission_index:
+                for t in self.tasks.values():
+                    if (t.state == State.QUEUED
+                            and t.request.job_id == job_id):
+                        self._index_remove(t)
+            self.cv.notify_all()
+
+    def release_job(self, job_id: str):
+        with self.cv:
+            if job_id not in self.held_jobs:
+                return
+            self.held_jobs.discard(job_id)
+            if self.use_admission_index:
+                for t in self.tasks.values():
+                    if (t.state == State.QUEUED
+                            and t.request.job_id == job_id
+                            and self._ready(t)):
+                        self._index_insert(t)
+            self.cv.notify_all()
+
+    def job_running(self, job_id: str) -> bool:
+        """True while any of the job's ops is RUNNING. O(1): this is the
+        migration quiesce predicate, re-checked per cv notification."""
+        with self.cv:
+            return self._running_count.get(job_id, 0) > 0
+
+    def rehome_job(self, job_id: str, new_group: int) -> int:
+        """Move the job's QUEUED tasks to ``new_group`` (after its state
+        migrated there), keeping index membership and per-group counters
+        consistent. Returns the number of tasks moved."""
+        with self.cv:
+            self.locks.setdefault(new_group, GroupLock())
+            self.resident_job.setdefault(new_group, None)
+            moved = 0
+            for t in self.tasks.values():
+                if (t.state != State.QUEUED
+                        or t.request.job_id != job_id
+                        or t.group_id == new_group):
+                    continue
+                if self.use_admission_index:
+                    self._index_remove(t)
+                self.queued_count[t.group_id] -= 1
+                t.group_id = new_group
+                self.queued_count[new_group] = \
+                    self.queued_count.get(new_group, 0) + 1
+                if self.use_admission_index and self._ready(t):
+                    self._index_insert(t)
+                moved += 1
+            self.cv.notify_all()
+            return moved
+
+    def drop_group(self, group_id: int):
+        """Forget a retired group's scheduling state. Refuses while any open
+        task still targets the group."""
+        with self.cv:
+            open_tasks = [t.request.req_id for t in self.tasks.values()
+                          if t.group_id == group_id
+                          and t.state in (State.QUEUED, State.RUNNING)]
+            if open_tasks:
+                raise RuntimeError(
+                    f"group {group_id} still has open tasks {open_tasks}")
+            self.locks.pop(group_id, None)
+            self.resident_job.pop(group_id, None)
+            self._indexes.pop(group_id, None)
+            self.queued_count.pop(group_id, None)
+            self.group_busy.pop(group_id, None)
+            self.group_t_load.pop(group_id, None)
+            self.group_t_offload.pop(group_id, None)
+
+    def drop_job_telemetry(self, job_id: str):
+        with self.cv:
+            self.phase_log.pop(job_id, None)
+
+    def phase_records_since(self, job_id: str, seq: int) -> List[PhaseRecord]:
+        """Completion records newer than ``seq`` (the profiler's cursor
+        read; snapshot under the lock)."""
+        with self.cv:
+            log = self.phase_log.get(job_id)
+            if not log:
+                return []
+            return [r for r in log if r.seq > seq]
 
     # ------------------------------------------------------------ queries
     def outstanding(self) -> int:

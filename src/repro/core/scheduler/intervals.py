@@ -79,6 +79,36 @@ class IntervalSet:
             self.ends.insert(i + j, pe)
         return True
 
+    def subtract(self, s: float, e: float):
+        """Remove the intersection of [s, e) from the free set, regardless of
+        coverage (live-completion carving: an op's actual busy window may
+        straddle windows already consumed by the projected plan)."""
+        if e <= s:
+            return
+        i = max(bisect.bisect_right(self.starts, s) - 1, 0)
+        while i < len(self.starts) and self.starts[i] < e:
+            ws, we = self.starts[i], self.ends[i]
+            if we <= s:
+                i += 1
+                continue
+            lo, hi = max(ws, s), min(we, e)
+            del self.starts[i], self.ends[i]
+            j = i
+            if ws < lo:
+                self.starts.insert(j, ws)
+                self.ends.insert(j, lo)
+                j += 1
+            if hi < we:
+                self.starts.insert(j, hi)
+                self.ends.insert(j, we)
+                j += 1
+            i = j
+
+    def trim_before(self, t: float):
+        """Drop free capacity earlier than ``t`` (the past cannot be
+        allocated; idle time behind ``now`` is spent, not banked)."""
+        self.subtract(float("-inf"), t)
+
     def free(self, s: float, e: float):
         """Return [s, e) to the free set, merging neighbours."""
         if e <= s:

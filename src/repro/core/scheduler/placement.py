@@ -14,6 +14,17 @@ broken by predicted phase interference against resident jobs.
 Cold start (no trace): a dedicated group is provisioned for clean profiling.
 Warm start: trace fitting as above. A repacking event re-fits all profiled
 jobs to raise packing density.
+
+Live-plane operation (the control plane in ``core/control_plane.py``):
+fitting takes an ``origin`` — the wall/virtual time the trace's cycle 0
+starts — so free windows can be kept in absolute time. ``NodeGroup`` free
+state is then maintained *incrementally*: ``note_busy`` carves actually
+measured execution out of the free set as completions stream in,
+``advance_to`` retires capacity behind ``now``, and ``extend_to`` rolls the
+planning horizon forward (projecting resident jobs' periodic segments into
+the new span). Groups can be added and removed at runtime
+(``PlacementPolicy.add_group`` / ``remove_group``) — the hooks the capacity
+adjuster drives.
 """
 from __future__ import annotations
 
@@ -47,9 +58,58 @@ class NodeGroup:
     nodes: int
     free: IntervalSet                   # free windows over the planning horizon
     resident: List["Placed"] = dataclasses.field(default_factory=list)
+    horizon_end: float = 0.0            # absolute end of the planned span
+
+    def __post_init__(self):
+        if self.horizon_end == 0.0 and len(self.free):
+            self.horizon_end = self.free.ends[-1]
 
     def occupancy(self, horizon: float) -> float:
         return 1.0 - self.free.total_free(horizon) / max(horizon * 1.0, 1e-9)
+
+    # ------------------------------------------------- incremental updates
+    def note_busy(self, t0: float, t1: float):
+        """Carve an actually-measured execution window out of the free set
+        (live completion feedback). Safe when the window overlaps segments
+        the projected plan already consumed — only the intersection with
+        still-free capacity is removed."""
+        self.free.subtract(t0, t1)
+
+    def advance_to(self, now: float):
+        """Retire capacity behind ``now``: the past cannot be allocated."""
+        self.free.trim_before(now)
+
+    def carve_resident(self, p: "Placed", lo: float, hi: float):
+        """Subtract ``p``'s planned windows intersecting [lo, hi) from the
+        free set (idempotent: already-busy spans stay busy)."""
+        period = p.trace.period
+        if period <= 0.0:
+            return
+        anchor = p.origin + p.shift
+        c = 0 if p.once else max(0, int((lo - anchor) // period) - 1)
+        while True:
+            base = anchor + c * period
+            if base > hi:
+                break
+            for a, d in p.trace.segments:
+                s, e = base + a, base + a + d
+                if e > lo and s < hi:
+                    self.free.subtract(max(s, lo), min(e, hi))
+            if p.once:
+                break                 # one-shot reservations do not repeat
+            c += 1
+
+    def extend_to(self, new_end: float):
+        """Roll the planning horizon forward to ``new_end``: the new span is
+        freed, then every resident job's *periodic* segments are projected
+        into it (one-shot cold reservations do not repeat)."""
+        if new_end <= self.horizon_end:
+            return
+        old_end = self.horizon_end
+        self.free.free(old_end, new_end)
+        for p in self.resident:
+            self.carve_resident(p, old_end, new_end)
+        self.horizon_end = new_end
 
 
 @dataclasses.dataclass
@@ -58,6 +118,9 @@ class Placed:
     trace: JobTrace
     group_id: int
     shift: float
+    origin: float = 0.0                # absolute time of cycle 0's start
+    once: bool = False                 # one-shot reservation (cold profiling)
+    n_cycles: int = 0                  # cycles actually allocated
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,12 +141,13 @@ def scheduling_cost(trace: JobTrace, shift: float,
 
 
 def candidate_shifts(trace: JobTrace, free: IntervalSet,
-                     cfg: PlacementConfig) -> List[float]:
-    """delta = window_start - segment_offset alignments, clipped to range."""
+                     cfg: PlacementConfig, origin: float = 0.0) -> List[float]:
+    """delta = window_start - segment_offset alignments, clipped to range.
+    ``origin`` translates the trace into the free set's absolute frame."""
     cands = {0.0}
     limit = cfg.alpha * trace.period
     for (a, _), (ws, _) in itertools.product(trace.segments, free.intervals()):
-        d = ws - a
+        d = ws - a - origin
         if 0.0 <= d <= limit:
             cands.add(d)
     out = sorted(cands)
@@ -94,11 +158,12 @@ def candidate_shifts(trace: JobTrace, free: IntervalSet,
 
 
 def best_shift(trace: JobTrace, free: IntervalSet,
-               cfg: PlacementConfig) -> Optional[Tuple[float, float]]:
+               cfg: PlacementConfig,
+               origin: float = 0.0) -> Optional[Tuple[float, float]]:
     """Min-cost feasible micro-shift for one group. (shift, cost) or None."""
     best: Optional[Tuple[float, float]] = None
-    for delta in candidate_shifts(trace, free, cfg):
-        if not free.simulate_insert(trace.segments, delta):
+    for delta in candidate_shifts(trace, free, cfg, origin):
+        if not free.simulate_insert(trace.segments, origin + delta):
             continue
         cost = scheduling_cost(trace, delta, cfg)
         if best is None or cost < best[1]:
@@ -107,15 +172,15 @@ def best_shift(trace: JobTrace, free: IntervalSet,
 
 
 def phase_interference(trace: JobTrace, shift: float,
-                       group: NodeGroup) -> float:
+                       group: NodeGroup, origin: float = 0.0) -> float:
     """Predicted overlap of the shifted active segments with resident jobs'
     active segments over one hyper-cycle (lower = better, §4.3.2)."""
     total = 0.0
     for placed in group.resident:
         for a, d in trace.segments:
-            s0 = (a + shift) % placed.trace.period
+            s0 = (origin + a + shift) % placed.trace.period
             for ra, rd in placed.trace.segments:
-                rs = (ra + placed.shift) % placed.trace.period
+                rs = (placed.origin + ra + placed.shift) % placed.trace.period
                 lo = max(s0, rs)
                 hi = min(s0 + d, rs + rd)
                 total += max(0.0, hi - lo)
@@ -123,54 +188,95 @@ def phase_interference(trace: JobTrace, shift: float,
 
 
 class PlacementPolicy:
-    """Dual-phase (cold/warm) placement over a set of node groups."""
+    """Dual-phase (cold/warm) placement over a set of node groups.
+
+    Groups are dynamic: ``add_group`` / ``remove_group`` let a live capacity
+    adjuster grow and shrink the fleet between fits."""
 
     def __init__(self, groups: Sequence[NodeGroup],
                  cfg: PlacementConfig = PlacementConfig()):
         self.groups = list(groups)
+        self._by_id: Dict[int, NodeGroup] = {g.group_id: g for g in self.groups}
         self.cfg = cfg
         self.placed: Dict[str, Placed] = {}
 
+    # ------------------------------------------------------ group registry
+    def group(self, group_id: int) -> Optional[NodeGroup]:
+        return self._by_id.get(group_id)
+
+    def add_group(self, group: NodeGroup) -> NodeGroup:
+        if group.group_id in self._by_id:
+            raise ValueError(f"group {group.group_id} already registered")
+        self.groups.append(group)
+        self._by_id[group.group_id] = group
+        return group
+
+    def remove_group(self, group_id: int) -> NodeGroup:
+        g = self._by_id.get(group_id)
+        if g is None:
+            raise KeyError(f"unknown group {group_id}")
+        if g.resident:
+            raise RuntimeError(
+                f"group {group_id} still hosts {[p.job_id for p in g.resident]}")
+        del self._by_id[group_id]
+        self.groups = [x for x in self.groups if x.group_id != group_id]
+        return g
+
+    def _eligible(self, only: Optional[Sequence[int]]) -> List[NodeGroup]:
+        if only is None:
+            return self.groups
+        allowed = set(only)
+        return [g for g in self.groups if g.group_id in allowed]
+
     # ------------------------------------------------------------- place
     def place_cold(self, job_id: str, nodes: int,
-                   expected_duration: float) -> Optional[Placed]:
+                   expected_duration: float, origin: float = 0.0,
+                   groups: Optional[Sequence[int]] = None) -> Optional[Placed]:
         """Cold start: dedicated group for clean profiling (no sharing)."""
-        for g in self.groups:
+        for g in self._eligible(groups):
             if g.nodes >= nodes and not g.resident and \
-                    g.free.covers(0.0, expected_duration):
-                g.free.allocate(0.0, expected_duration)
+                    g.free.covers(origin, origin + expected_duration):
+                g.free.allocate(origin, origin + expected_duration)
                 p = Placed(job_id, JobTrace(expected_duration,
                                             ((0.0, expected_duration),),
-                                            nodes), g.group_id, 0.0)
+                                            nodes), g.group_id, 0.0,
+                           origin=origin, once=True, n_cycles=1)
                 g.resident.append(p)
                 self.placed[job_id] = p
                 return p
         return None
 
     def place_warm(self, job_id: str, trace: JobTrace,
-                   n_cycles: Optional[int] = None) -> Optional[Placed]:
+                   n_cycles: Optional[int] = None, origin: float = 0.0,
+                   groups: Optional[Sequence[int]] = None) -> Optional[Placed]:
         """Warm start: micro-shift trace fitting over eligible groups."""
         cfg = self.cfg
         n_cycles = n_cycles or max(1, int(cfg.horizon // trace.period))
         scored: List[Tuple[float, float, NodeGroup, float]] = []
-        for g in self.groups:
+        for g in self._eligible(groups):
             if g.nodes < trace.nodes:
                 continue
-            fit = best_shift(trace, g.free, cfg)
+            fit = best_shift(trace, g.free, cfg, origin)
             if fit is None:
                 continue
             delta, cost = fit
-            interf = phase_interference(trace, delta, g)
+            interf = phase_interference(trace, delta, g, origin)
             scored.append((cost, interf, g, delta))
         if not scored:
             return None
         scored.sort(key=lambda t: (round(t[0], 6), t[1], t[2].group_id))
         cost, _, g, delta = scored[0]
         for c in range(n_cycles):
-            base = c * trace.period
+            base = origin + c * trace.period + delta
             for a, d in trace.segments:
-                g.free.allocate(base + a + delta, base + a + delta + d)
-        p = Placed(job_id, trace, g.group_id, delta)
+                # subtract, not allocate: feasibility was checked for the
+                # aligned cycle, but on a LIVE group later cycles may
+                # partially overlap windows already carved by measured
+                # completions (note_busy) — the window must end up busy
+                # either way, never silently stay free
+                g.free.subtract(base + a, base + a + d)
+        p = Placed(job_id, trace, g.group_id, delta, origin=origin,
+                   n_cycles=n_cycles)
         g.resident.append(p)
         self.placed[job_id] = p
         return p
@@ -180,16 +286,37 @@ class PlacementPolicy:
         p = self.placed.pop(job_id, None)
         if p is None:
             return
-        g = next(g for g in self.groups if g.group_id == p.group_id)
+        g = self._by_id.get(p.group_id)
+        if g is None:
+            return                     # group already retired
         g.resident = [r for r in g.resident if r.job_id != job_id]
-        n_cycles = n_cycles or max(1, int(self.cfg.horizon // p.trace.period))
+        n_cycles = p.n_cycles or n_cycles or max(
+            1, int(self.cfg.horizon // p.trace.period))
+        freed_from = p.origin
         for c in range(n_cycles):
-            base = c * p.trace.period
+            base = p.origin + c * p.trace.period + p.shift
             for a, d in p.trace.segments:
-                g.free.free(base + a + p.shift, base + a + p.shift + d)
+                g.free.free(base + a, base + a + d)
+        # projected cycles beyond the allocated block (extend_to carvings)
+        if not p.once:
+            anchor = p.origin + p.shift
+            c = n_cycles
+            while anchor + c * p.trace.period <= g.horizon_end:
+                base = anchor + c * p.trace.period
+                for a, d in p.trace.segments:
+                    if base + a < g.horizon_end:
+                        g.free.free(base + a, min(base + a + d, g.horizon_end))
+                c += 1
+        # the blanket free() above may have returned windows that OTHER
+        # residents also occupy (overlapping projections are possible
+        # beyond the feasibility-checked blocks): re-carve every remaining
+        # resident over the affected span so their reservations survive
+        for other in g.resident:
+            g.carve_resident(other, freed_from, g.horizon_end)
 
     # ----------------------------------------------------------- repack
-    def repack(self) -> int:
+    def repack(self, origin: float = 0.0,
+               groups: Optional[Sequence[int]] = None) -> int:
         """Repacking event (§4.3.2): re-fit all placed jobs by descending
         duty ratio. Returns the number of jobs that moved."""
         jobs = sorted(self.placed.items(),
@@ -198,9 +325,11 @@ class PlacementPolicy:
             self.remove(job_id)
         moved = 0
         for job_id, old in jobs:
-            p = self.place_warm(job_id, old.trace)
+            p = self.place_warm(job_id, old.trace, origin=origin,
+                                groups=groups)
             if p is None:  # should not happen: it fitted before
-                p = self.place_warm(job_id, old.trace, n_cycles=1)
+                p = self.place_warm(job_id, old.trace, n_cycles=1,
+                                    origin=origin, groups=groups)
             if p and (p.group_id != old.group_id or p.shift != old.shift):
                 moved += 1
         return moved

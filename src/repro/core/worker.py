@@ -27,6 +27,16 @@ from repro.train import optimizer as opt
 from repro.train.train_state import TrainState
 
 
+def _value_readout(logits):
+    """Critic value estimate per token without a dedicated value head: the
+    free-energy (logsumexp) of the logits, squashed to (-1, 1). It is
+    differentiable w.r.t. the whole backbone, so the clipped value loss
+    trains a role="critic" deployment through the same FORWARD_BACKWARD /
+    OPTIM_STEP primitives as the actor."""
+    v = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    return jnp.tanh(v / jnp.sqrt(logits.shape[-1] * 1.0))
+
+
 class WorkerProcessGroup:
     def __init__(self, spec: api.DeploymentSpec, state_manager: StateManager,
                  rng_seed: int = 0, grpo_cfg: Optional[grpo.GRPOConfig] = None,
@@ -48,7 +58,9 @@ class WorkerProcessGroup:
         # jitted primitives (built lazily)
         self._update_actor = None
         self._logprob = None
+        self._values = None
         self._ppo_grads = None
+        self._value_grads = None
 
     # -------------------------------------------------------------- state
     @property
@@ -114,7 +126,8 @@ class WorkerProcessGroup:
     # ------------------------------------------------------ op handlers
     def _op_init(self, seed: int = 0):
         params = self.model.init_params(jax.random.PRNGKey(seed))
-        if self.spec.role == "train":
+        if self.spec.role in ("train", "critic"):
+            # critic deployments run their own optim_step (value updates)
             self._store(params=params,
                         opt_state=opt.init(params, self.adamw_cfg))
         else:
@@ -133,16 +146,44 @@ class WorkerProcessGroup:
             extra_inputs=extra_inputs)
         return {"tokens": toks, "logprobs": logps, "alive": alive}
 
-    def _op_forward(self, batch):
+    def _op_forward(self, batch, output: str = "logprobs"):
+        """Forward-only primitive. ``output`` selects the readout:
+        "logprobs" (compute_log_prob, default) or "values" (critic value
+        estimates per token)."""
+        if output == "values":
+            if self._values is None:
+                def _vals(p, b):
+                    logits, _ = self.model.forward(p, b, None)[:2]
+                    return _value_readout(logits)
+                self._values = jax.jit(_vals)
+            return self._values(self.params(), batch)
+        if output != "logprobs":
+            raise ValueError(f"unknown forward output {output!r}")
         if self._logprob is None:
             self._logprob = jax.jit(grpo.make_compute_log_prob(self.model))
         return self._logprob(self.params(), batch)
 
     def _op_forward_backward(self, batch, objective: str = "grpo"):
         """Split-phase gradient computation. ``objective`` selects the loss
-        family: "grpo" (default) or "ppo" (rl/ppo.py's clipped surrogate),
-        so multi-algorithm jobs share one WPG primitive."""
+        family: "grpo" (default), "ppo" (rl/ppo.py's clipped surrogate), or
+        "value" (the clipped critic loss for role="critic" deployments), so
+        multi-algorithm / multi-role jobs share one WPG primitive."""
         params = self.params()
+        if objective == "value":
+            if self._value_grads is None:
+                def _vgrads(p, b):
+                    def _loss(pp):
+                        logits, aux = self.model.forward(pp, b, None)[:2]
+                        values = _value_readout(logits)
+                        vl = ppo_lib.value_loss(
+                            values, b["value_targets"], b["old_values"],
+                            b["loss_mask"], self.ppo_cfg)
+                        return vl + 0.01 * aux, vl
+                    return jax.value_and_grad(_loss, has_aux=True)(p)
+                self._value_grads = jax.jit(_vgrads)
+            (loss, vl), grads = self._value_grads(params, batch)
+            return {"grads": grads,
+                    "metrics": {"value_loss": vl, "loss": loss}}
         if objective == "ppo":
             if self._ppo_grads is None:
                 def _grads(p, b):

@@ -1,0 +1,518 @@
+"""The live cluster control plane (core/control_plane.py + the layers under
+it): online trace profiling, cold→warm placement with realized migration,
+capacity adjustment, and the supporting executor/router mechanics.
+
+Covers:
+- the online profiler: a driven GRPO-shaped job under VirtualClock yields a
+  JobTrace whose phase durations match the executor's task records EXACTLY,
+  and ``place_warm`` on that trace agrees with the simulator's placement for
+  the same trace (time-translated free windows),
+- bounded ``executor.tasks`` retention under a long churn loop (ROADMAP
+  open item: a week-long serve plane must not grow memory without bound),
+- admission hold / release / rehome (the drain half of elastic
+  re-placement) and ``Router.reassign_job`` billing continuity,
+- ``Router.retire_group`` symmetric to the dynamic serve-worker spawn,
+- incremental NodeGroup free-window maintenance (note_busy / advance_to /
+  extend_to) and runtime add/remove of groups,
+- the acceptance flow: ``PlexCluster.serve()`` with ``group_id=None`` jobs
+  cold-profiled, warm-re-placed onto a SHARED group by micro-shift fitting,
+  a third arrival triggering a capacity-adjustment spawn, billing conserved
+  across profiling→migration→steady-state,
+- bit-identical director decision replay under VirtualClock.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.cluster import BillingRecord, PlexCluster
+from repro.core.control_plane import (DirectorConfig, PlacementDirector,
+                                      trace_from_cycles)
+from repro.core.controller import JobConfig
+from repro.core.router import Router
+from repro.core.scheduler.executor import (State, TaskExecutor, VirtualClock)
+from repro.core.scheduler.intervals import IntervalSet
+from repro.core.scheduler.placement import (JobTrace, NodeGroup,
+                                            PlacementConfig, PlacementPolicy)
+from repro.core.scheduler import hrrs
+from test_dispatch import StubWPG
+
+TINY = (("num_layers", 2), ("d_model", 32), ("num_heads", 4),
+        ("num_kv_heads", 2), ("head_dim", 8), ("d_ff", 64),
+        ("vocab_size", 64), ("tie_embeddings", True))
+
+
+class ClockWPG:
+    """Deterministic execution backend: advances the shared VirtualClock by
+    the op's exec_estimate, so task-record durations are exact."""
+
+    def __init__(self, spec, sm, clock):
+        self.spec = spec
+        self.sm = sm
+        self.clock = clock
+        self.exec_log = []
+
+    @property
+    def job_prefix(self):
+        return f"{self.spec.job_id}:{self.spec.deployment_id}"
+
+    def resident(self):
+        return False
+
+    def ensure_resident(self):
+        return 0.0
+
+    def offload(self, to=None):
+        return 0.0
+
+    def execute(self, qop):
+        self.clock.advance(qop.exec_estimate)
+        self.exec_log.append((qop.op.value, qop.exec_estimate))
+        return {"req_id": qop.req_id}
+
+
+def _spec(job_id, dep_id=None, role="train"):
+    return api.DeploymentSpec(deployment_id=dep_id or f"{job_id}-train",
+                              job_id=job_id, model_name="stub", role=role)
+
+
+def _virtual_router():
+    clock = VirtualClock()
+    router = Router(now=clock,
+                    wpg_factory=lambda spec, sm: ClockWPG(spec, sm, clock))
+    return clock, router
+
+
+def _grpo_cycle(dep, rollout=6.0, logprob=1.0, update=3.0, sync=0.5):
+    """One GRPO-shaped cycle as a strict chain (generate -> forward ->
+    update_actor -> sync_weights) with exact-binary estimates."""
+    gen = dep.generate(np.zeros((1, 2), np.int32), exec_estimate=rollout)
+    fwd = dep.forward(0, exec_estimate=logprob, after=(gen,))
+    upd = dep.update_actor(0, exec_estimate=update, after=(fwd,))
+    syn = dep.sync_weights(dep, exec_estimate=sync, after=(upd,))
+    return [gen, fwd, upd, syn]
+
+
+# ------------------------------------------------------- online profiler
+def test_profiler_trace_matches_task_records_exactly():
+    """The folded JobTrace's phase durations must equal the executor's task
+    records bit-for-bit under VirtualClock."""
+    clock, router = _virtual_router()
+    director = PlacementDirector(
+        router, DirectorConfig(horizon=200.0, cold_reserve_s=50.0,
+                               warmup_cycles=0),
+        initial_groups=[0, 1])
+    gid = director.assign("jobA")
+    assert gid == 0                      # first empty group, cold-dedicated
+    dep = router.deploy(_spec("jobA"), group_id=gid)
+    tails = _grpo_cycle(dep)
+    router.drain()
+    for f in tails:
+        f.result()
+
+    # records exported by the executor: op -> exact duration
+    recs = router.executor.phase_records_since("jobA", 0)
+    durs = {r.op: r.duration for r in recs}
+    assert durs == {"generate": 6.0, "forward": 1.0,
+                    "update_actor": 3.0, "sync_weights": 0.5}
+
+    director.on_job_step("jobA")
+    trace = director.profiled_trace("jobA")
+    assert trace is not None
+    # the trace's anatomy equals the records EXACTLY: rollout gap, then
+    # logprob/update/sync back-to-back
+    assert trace.period == 6.0 + 1.0 + 3.0 + 0.5
+    assert trace.segments == ((6.0, 1.0), (7.0, 3.0), (10.0, 0.5))
+    js = director.job_state("jobA")
+    assert js.phase == "warm"
+    assert js.cycles[0] == {"rollout": 6.0, "compute_log_prob": 1.0,
+                            "update_actor": 3.0, "sync_weight": 0.5}
+
+
+def test_profiled_trace_placement_agrees_with_simulator():
+    """place_warm on the live (time-translated) free windows must pick the
+    same group and shift as the simulator's origin-0 placement of the same
+    trace."""
+    trace = JobTrace(period=10.5, segments=((6.0, 1.0), (7.0, 3.0),
+                                            (10.0, 0.5)))
+    resident = JobTrace(period=10.5, segments=((6.0, 2.0),))
+    cfg = PlacementConfig(horizon=105.0)
+
+    sim = PlacementPolicy([NodeGroup(0, 1, IntervalSet([(0.0, 105.0)])),
+                           NodeGroup(1, 1, IntervalSet([(0.0, 105.0)]))], cfg)
+    assert sim.place_warm("res", resident) is not None
+    p_sim = sim.place_warm("new", trace)
+
+    t0 = 1000.0                          # live plane: windows start at "now"
+    live = PlacementPolicy(
+        [NodeGroup(0, 1, IntervalSet([(t0, t0 + 105.0)])),
+         NodeGroup(1, 1, IntervalSet([(t0, t0 + 105.0)]))], cfg)
+    assert live.place_warm("res", resident, origin=t0) is not None
+    p_live = live.place_warm("new", trace, origin=t0)
+
+    assert p_sim is not None and p_live is not None
+    assert (p_live.group_id, p_live.shift) == (p_sim.group_id, p_sim.shift)
+
+
+def test_trace_from_cycles_means_multiple_cycles():
+    cycles = [{"rollout": 4.0, "update_actor": 2.0},
+              {"rollout": 6.0, "update_actor": 4.0}]
+    t = trace_from_cycles(cycles)
+    assert t.period == 5.0 + 3.0
+    assert t.segments == ((5.0, 3.0),)
+    assert trace_from_cycles([{"rollout": 1.0}]) is None  # no update phase
+
+
+# ----------------------------------------------- bounded task retention
+def test_executor_tasks_bounded_under_churn():
+    """ROADMAP open item: settled Task records must age out. A long churn
+    loop (submit/admit/finish) must keep ``executor.tasks`` bounded by the
+    retention cap plus open tasks, and the per-job phase log by its
+    window."""
+    clock = VirtualClock()
+    ex = TaskExecutor(now=clock, policy="hrrs", max_settled_tasks=100,
+                      phase_window=32)
+    for i in range(1, 1201):
+        req = hrrs.Request(req_id=i, job_id=f"job{i % 3}", op="update_actor",
+                           exec_time=1.0, arrival_time=clock.now())
+        ex.submit(req, group_id=0)
+        task = ex.pick_next(0)
+        assert task is not None and ex.try_start(task)
+        clock.advance(0.25)
+        ex.finish(task)
+    assert len(ex.tasks) <= 100
+    assert len(ex._settled) <= 100
+    for log in ex.phase_log.values():
+        assert len(log) <= 32
+    assert ex.outstanding() == 0
+    # group telemetry survived the churn
+    assert ex.group_busy[0] == pytest.approx(1200 * 0.25)
+    assert ex.queued_count[0] == 0
+
+
+def test_failed_records_outlive_completed_churn():
+    """A FAILED record is pinned while poison_dirty is set, then moves to
+    the failed ring: COMPLETED churn can no longer evict it (a late
+    dependent must still see the error), and only further FAILURES beyond
+    the failed ring's own capacity age it out."""
+    clock = VirtualClock()
+    ex = TaskExecutor(now=clock, policy="hrrs", max_settled_tasks=2)
+
+    def settle(req_id, error=None):
+        t = ex.submit(hrrs.Request(req_id=req_id, job_id="j", op="forward",
+                                   exec_time=1.0, arrival_time=0.0), 0)
+        ex.try_start(t)
+        ex.finish(t, error=error)
+
+    settle(1, error="boom")              # FAILED, sets poison_dirty
+    assert ex.poison_dirty
+    for i in range(2, 5):
+        settle(i)
+    assert 1 in ex.tasks                 # pinned at the ring's head
+    ex.poison_dirty = False              # router's sweep reached fixpoint
+    for i in range(5, 20):
+        settle(i)                        # heavy COMPLETED churn
+    assert 1 in ex.tasks                 # failed record survives it
+    assert sum(1 for t in ex.tasks.values()
+               if t.state == State.COMPLETED) <= 2
+    for i in range(20, 24):              # but failures do age it out
+        settle(i, error="boom")
+        ex.poison_dirty = False
+        settle(100 + i)                  # trigger a prune pass
+    assert 1 not in ex.tasks
+    assert len(ex.tasks) <= 5
+
+
+# ------------------------------------------------- hold / release / rehome
+def test_hold_release_gates_admission():
+    clock, router = _virtual_router()
+    depA = router.deploy(_spec("jobA"), group_id=0)
+    depB = router.deploy(_spec("jobB", "jobB-train"), group_id=0)
+    ex = router.executor
+    fa = depA.forward(0, exec_estimate=1.0)
+    fb = depB.forward(0, exec_estimate=1.0)
+    ex.hold_job("jobA")
+    task = ex.pick_next(0)
+    assert task is not None and task.request.job_id == "jobB"
+    router.step(max_ops=10)
+    assert fb.done() and not fa.done()   # held job made no progress
+    ex.release_job("jobA")
+    router.drain()
+    assert fa.result()["req_id"] > 0
+
+
+def test_rehome_moves_queued_tasks_and_counters():
+    clock, router = _virtual_router()
+    dep = router.deploy(_spec("jobA"), group_id=0)
+    futs = [dep.forward(i, exec_estimate=1.0) for i in range(3)]
+    ex = router.executor
+    assert ex.queued_count[0] == 3
+    router.ensure_group(7)
+    ex.rehome_job("jobA", 7)
+    assert ex.queued_count[0] == 0 and ex.queued_count[7] == 3
+    # ops now execute on group 7's lock (the deployment mapping moved too)
+    router.group_of["jobA-train"] = 7
+    router.drain()
+    for f in futs:
+        assert f.result()["req_id"] > 0
+    assert all(t.group_id == 7 for t in ex.tasks.values())
+
+
+def test_reassign_job_migrates_state_and_queued_ops():
+    """reassign_job: hold -> quiesce -> migrate state -> rehome queued ->
+    release, with exec logs (billing source) surviving intact."""
+    clock, router = _virtual_router()
+    dep = router.deploy(_spec("jobA"), group_id=0)
+    sm0 = router.state_managers[0]
+    wpg = router.wpgs["jobA-train"]
+    sm0.register(wpg.job_prefix, {"w": np.ones((8, 8), np.float32)})
+    done = [dep.forward(i, exec_estimate=1.0) for i in range(2)]
+    router.drain()
+    queued = [dep.forward(i, exec_estimate=1.0) for i in range(3)]
+    moved = router.reassign_job("jobA", 3)
+    assert moved > 0                     # state bytes migrated
+    assert router.group_of["jobA-train"] == 3
+    assert not sm0.keys_for(wpg.job_prefix)
+    assert router.state_managers[3].keys_for(wpg.job_prefix)
+    assert router.executor.queued_count.get(0, 0) == 0
+    router.drain()
+    for f in done + queued:
+        assert f.result()["req_id"] > 0
+    # billing source of truth survived: all 5 ops are in the ONE exec log
+    assert len(wpg.exec_log) == 5
+
+
+# --------------------------------------------------------- group lifecycle
+def _serve_threads():
+    return [t for t in threading.enumerate()
+            if t.name.startswith("serve-") and t.is_alive()]
+
+
+def test_retire_group_tears_down_worker_and_state():
+    trace = []
+    router = Router(wpg_factory=lambda spec, sm: StubWPG(spec, sm, 0.0,
+                                                         trace))
+    dep0 = router.deploy(_spec("j0"), group_id=0)
+    dep5 = router.deploy(_spec("j5", "j5-train"), group_id=5)
+    with router:
+        assert len(_serve_threads()) == 2
+        with pytest.raises(RuntimeError, match="still hosts"):
+            router.retire_group(5)
+        assert dep5.forward(0).wait(timeout=10.0)["req_id"] > 0
+        router.teardown("j5-train")
+        router.retire_group(5)
+        assert len(_serve_threads()) == 1
+        assert 5 not in router.executor.locks
+        assert 5 not in router.state_managers
+        # the surviving group still serves
+        assert dep0.forward(0).wait(timeout=10.0)["req_id"] > 0
+        # and a later ensure_group re-spawns a worker dynamically
+        router.ensure_group(5)
+        assert len(_serve_threads()) == 2
+    assert not _serve_threads()
+
+
+def test_group_telemetry_reports_depth_and_occupancy():
+    clock, router = _virtual_router()
+    dep = router.deploy(_spec("jobA"), group_id=0)
+    router.ensure_group(2)
+    for i in range(4):
+        dep.forward(i, exec_estimate=1.0)
+    t = router.group_telemetry()
+    assert t[0]["queue_depth"] == 4
+    assert t[0]["deployments"] == ["jobA-train"]
+    assert t[2]["queue_depth"] == 0 and not t[2]["deployments"]
+    router.drain()
+    t = router.group_telemetry()
+    assert t[0]["queue_depth"] == 0
+    assert t[0]["busy_seconds"] == pytest.approx(4.0)
+
+
+# ------------------------------------------- incremental NodeGroup windows
+def test_nodegroup_incremental_updates():
+    g = NodeGroup(0, 1, IntervalSet([(0.0, 100.0)]))
+    assert g.horizon_end == 100.0
+    g.note_busy(10.0, 20.0)              # live completion carves capacity
+    g.note_busy(15.0, 30.0)              # overlapping carve is safe
+    assert g.free.intervals() == [(0.0, 10.0), (30.0, 100.0)]
+    g.advance_to(40.0)                   # the past is spent
+    assert g.free.intervals() == [(40.0, 100.0)]
+    # a resident periodic job is projected into the extended horizon
+    from repro.core.scheduler.placement import Placed
+    g.resident.append(Placed("j", JobTrace(50.0, ((0.0, 10.0),)), 0, 0.0,
+                             origin=40.0))
+    g.extend_to(200.0)
+    assert g.horizon_end == 200.0
+    free = g.free.intervals()
+    # projected segments at [140, 150) and [190, 200) are NOT free
+    assert not g.free.covers(140.0, 150.0)
+    assert not g.free.covers(190.0, 200.0)
+    assert g.free.covers(150.0, 190.0)
+    assert free[0][0] == 40.0
+
+
+def test_policy_add_remove_group_runtime():
+    pol = PlacementPolicy([NodeGroup(0, 1, IntervalSet([(0.0, 100.0)]))],
+                          PlacementConfig(horizon=100.0))
+    g1 = pol.add_group(NodeGroup(1, 1, IntervalSet([(0.0, 100.0)])))
+    assert pol.group(1) is g1
+    p = pol.place_cold("j", 1, 10.0)
+    assert p is not None and p.group_id == 0
+    with pytest.raises(RuntimeError, match="hosts"):
+        pol.remove_group(0)
+    pol.remove("j")
+    pol.remove_group(0)
+    assert pol.group(0) is None and len(pol.groups) == 1
+
+
+# ------------------------------------------------ director decision replay
+def _director_flow(n_steps=2):
+    """The full control-plane flow (cold x2 -> warm consolidation ->
+    migration -> retire -> third arrival spawn) on a VirtualClock; returns
+    the decision log with every op's admission order."""
+    clock, router = _virtual_router()
+    director = PlacementDirector(
+        router, DirectorConfig(horizon=300.0, cold_reserve_s=40.0,
+                               min_groups=1, warmup_cycles=0),
+        initial_groups=[0])
+    deps, ordinal, order = {}, {}, []
+
+    def submit_cycle(job, rollout, update):
+        gen = deps[job].generate(np.zeros((1, 2), np.int32),
+                                 exec_estimate=rollout)
+        upd = deps[job].update_actor(0, exec_estimate=update, after=(gen,))
+        for f, name in ((gen, "gen"), (upd, "upd")):
+            ordinal[f.sources[0]] = len(ordinal)
+        return [gen, upd]
+
+    def add(job, rollout, update):
+        gid = director.assign(job)
+        deps[job] = router.deploy(_spec(job, f"{job}-train"), group_id=gid)
+        return gid
+
+    g_a = add("jobA", 6.0, 2.0)
+    g_b = add("jobB", 5.0, 3.0)
+    assert g_a != g_b                    # cold jobs get dedicated groups
+    for step in range(n_steps):
+        for job, (r, u) in (("jobA", (6.0, 2.0)), ("jobB", (5.0, 3.0))):
+            tails = submit_cycle(job, r, u)
+            router.drain()
+            for f in tails:
+                f.result()
+            director.on_job_step(job)
+        clock.advance(0.5)
+    g_c = add("jobC", 4.0, 1.0)
+    events = [dict(e) for e in director.events]
+    states = {j: (director.job_state(j).phase, director.job_state(j).group_id)
+              for j in ("jobA", "jobB", "jobC")}
+    # admission order in submission ordinals (req_ids differ across runs)
+    for tasks in [router.executor.tasks]:
+        order = [ordinal[t.request.req_id]
+                 for t in sorted(tasks.values(), key=lambda t: t.t_started)
+                 if t.request.req_id in ordinal]
+    return events, states, order, g_c
+
+
+def test_director_flow_consolidates_and_spawns():
+    events, states, _, g_c = _director_flow()
+    kinds = [e["event"] for e in events]
+    assert kinds.count("cold_place") == 3       # A, B, C
+    assert kinds.count("warm_place") == 2       # A and B re-fitted
+    assert kinds.count("migrate") == 1          # one consolidation move
+    assert "retire_group" in kinds              # drained profiling group
+    assert "spawn_group" in kinds               # capacity adjustment
+    # A and B share one group after warm placement
+    assert states["jobA"][0] == states["jobB"][0] == "warm"
+    assert states["jobA"][1] == states["jobB"][1]
+    # C's arrival found no empty group -> the spawn served its cold place
+    assert states["jobC"][0] == "cold"
+    assert states["jobC"][1] == g_c != states["jobA"][1]
+    spawn = [e for e in events if e["event"] == "spawn_group"][-1]
+    assert spawn["reason"].startswith("cold:jobC")
+
+
+def test_director_flow_bit_identical_replay():
+    first = _director_flow()
+    second = _director_flow()
+    assert first == second, "control-plane replay diverged between runs"
+
+
+# --------------------------------------------- capacity adjuster triggers
+def test_queue_depth_triggers_spawn():
+    clock, router = _virtual_router()
+    director = PlacementDirector(
+        router, DirectorConfig(spawn_queue_depth=4, horizon=100.0),
+        initial_groups=[0])
+    director.assign("jobA")
+    dep = router.deploy(_spec("jobA"), group_id=0)
+    for i in range(6):
+        dep.forward(i, exec_estimate=1.0)
+    n_groups = len(director.policy.groups)
+    director.poll()
+    assert len(director.policy.groups) == n_groups + 1
+    assert any(e["event"] == "spawn_group"
+               and e["reason"].startswith("queue_depth")
+               for e in director.events)
+    director.poll()                      # spare group exists: no growth
+    assert len(director.policy.groups) == n_groups + 1
+
+
+# -------------------------------------------------- acceptance: serve e2e
+def _tiny(job_id, seed, steps=2):
+    return JobConfig(job_id=job_id, model_name="qwen2-0.5b", steps=steps,
+                     batch_size=4, group_size=2, max_new_tokens=4,
+                     seq_len=24, overrides=TINY, seed=seed)
+
+
+def test_serve_auto_placement_end_to_end():
+    """Acceptance: two jobs added with ``group_id=None`` are cold-profiled
+    on dedicated groups, warm-re-placed onto a SHARED group by micro-shift
+    fitting (one of them migrating live), the drained profiling group is
+    retired, and a third arrival triggers a capacity-adjustment spawn —
+    with per-job billing (busy + switch seconds) conserved across the
+    profiling → migration → steady-state transitions."""
+    c = PlexCluster(n_groups=1,
+                    director_cfg=DirectorConfig(horizon=240.0,
+                                                cold_reserve_s=30.0,
+                                                min_groups=1))
+    with c.serve():
+        c.add_job(_tiny("auto-a", seed=1, steps=3), group_id=None)
+        c.add_job(_tiny("auto-b", seed=2, steps=3), group_id=None)
+        deadline = time.monotonic() + 240
+        while not (c.director.job_state("auto-a").phase == "warm"
+                   and c.director.job_state("auto-b").phase == "warm"):
+            assert time.monotonic() < deadline, \
+                f"no warm promotion; events={c.director.events}"
+            assert not c.client_errors, c.client_errors
+            time.sleep(0.05)
+        # both warm jobs share one group (micro-shift consolidation)
+        ga = c.director.job_state("auto-a").group_id
+        gb = c.director.job_state("auto-b").group_id
+        assert ga == gb, c.director.events
+        # the third arrival must spawn a fresh group for clean profiling
+        spawns_before = sum(e["event"] == "spawn_group"
+                            for e in c.director.events)
+        c.add_job(_tiny("auto-c", seed=3, steps=2), group_id=None)
+        spawns_after = sum(e["event"] == "spawn_group"
+                           for e in c.director.events)
+        assert spawns_after == spawns_before + 1, c.director.events
+        assert c.director.job_state("auto-c").group_id != ga
+    kinds = [e["event"] for e in c.director.events]
+    assert kinds.count("migrate") >= 1
+    assert "retire_group" in kinds
+    # every job completed and billing is CONSERVED: busy time equals the
+    # sum of its deployments' exec logs (the logs survive migration)
+    for job in ("auto-a", "auto-b", "auto-c"):
+        ctl = c.controllers[job]
+        assert ctl.steps_completed == ctl.cfg.steps, job
+        rec = c.billing[job]
+        assert rec.steps == ctl.cfg.steps
+        logged = sum(dt for d, w in c.router.wpgs.items()
+                     if w.spec.job_id == job for _, dt in w.exec_log)
+        assert rec.busy_seconds == pytest.approx(logged), job
+        assert rec.busy_seconds > 0.0
+        assert rec.switch_seconds >= 0.0
+    assert not c.router.pending
+    assert not _serve_threads()

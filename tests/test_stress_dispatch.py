@@ -17,9 +17,12 @@ marker registered in pytest.ini.
 import threading
 import time
 
+import numpy as np
 import pytest
 
 from repro.core import api
+from repro.core.cluster import BillingRecord, PlexCluster
+from repro.core.control_plane import DirectorConfig
 from repro.core.router import Router
 from repro.core.scheduler.executor import State, VirtualClock
 from test_dispatch import StubWPG, make_router, submit_batch
@@ -109,6 +112,109 @@ def test_serial_replay_bit_identical_admission_order():
 def _serve_worker_threads():
     return [t for t in threading.enumerate()
             if t.name.startswith("serve-") and t.is_alive()]
+
+
+class _GenHeavyStub:
+    """Stub backend with a rollout-heavy phase profile (low training duty),
+    so profiled jobs genuinely pack onto shared groups."""
+
+    def __init__(self, spec, sm):
+        self.spec = spec
+        self.sm = sm
+        self.exec_log = []
+
+    @property
+    def job_prefix(self):
+        return f"{self.spec.job_id}:{self.spec.deployment_id}"
+
+    def resident(self):
+        return False
+
+    def ensure_resident(self):
+        return 0.0
+
+    def offload(self, to=None):
+        return 0.0
+
+    def execute(self, qop):
+        t0 = time.monotonic()
+        time.sleep(0.02 if qop.op is api.Op.GENERATE else 0.002)
+        self.exec_log.append((qop.op.value, time.monotonic() - t0))
+        return {"req_id": qop.req_id}
+
+
+def test_control_plane_churn_soak():
+    """Soak the live control plane with add/remove/autoscale churn for 14
+    rounds: jobs arrive through the director (cold profiling groups spawn),
+    get warm-fitted and migrated onto shared groups, and detach. Invariants
+    per round: the serve-worker thread set matches the router's registry
+    (retire tears workers down, nothing leaks), and every group hosting a
+    deployment is tracked by the director's placement policy (no orphaned
+    groups). At the end: billing totals reconcile exactly against the
+    per-WPG exec logs ACROSS all migrations, and the fleet shrinks back to
+    ``min_groups``."""
+    c = PlexCluster(
+        n_groups=1, wpg_factory=lambda spec, sm: _GenHeavyStub(spec, sm),
+        director_cfg=DirectorConfig(horizon=120.0, cold_reserve_s=10.0,
+                                    warmup_cycles=0, min_groups=1))
+    r = c.router
+    wpgs_ever = {}
+    live = {}
+    migrations = 0
+    with r:
+        for round_no in range(14):
+            job = f"soak{round_no}"
+            gid = c.director.assign(job)
+            spec = api.DeploymentSpec(deployment_id=f"{job}-train",
+                                      job_id=job, model_name="stub",
+                                      role="train")
+            dep = r.deploy(spec, group_id=gid)
+            wpgs_ever[spec.deployment_id] = r.wpgs[spec.deployment_id]
+            c.billing.setdefault(job, BillingRecord(job))
+            live[job] = spec.deployment_id
+            for _ in range(2):        # two profiled GRPO-shaped cycles
+                gen = dep.generate(np.zeros((1, 2), np.int32),
+                                   exec_estimate=2.0)
+                upd = dep.update_actor(0, exec_estimate=0.2, after=(gen,))
+                upd.wait(timeout=60.0)
+                c.director.on_job_step(job)
+            migrations = sum(e["event"] == "migrate"
+                             for e in c.director.events)
+            if round_no % 2 == 0:     # detach every other job mid-churn
+                r.wait_idle(timeout=60.0)
+                with c._bill_lock:
+                    c._bill_from_logs()
+                r.teardown(live.pop(job))
+                c.director.on_job_removed(job)
+            # ---- per-round invariants
+            r.wait_idle(timeout=60.0)
+            workers = {t.name for t in threading.enumerate()
+                       if t.name.startswith("serve-") and t.is_alive()}
+            assert workers == {f"serve-g{g}" for g in r._serve_threads}, \
+                f"round {round_no}: leaked/missing serve workers"
+            policy_groups = {g.group_id for g in c.director.policy.groups}
+            hosted = set(r.group_of.values())
+            assert hosted <= policy_groups, \
+                f"round {round_no}: orphaned groups {hosted - policy_groups}"
+        # the flow actually exercised migration (warm consolidation)
+        assert migrations >= 3, f"only {migrations} migrations in 14 rounds"
+        # drain the survivors
+        r.wait_idle(timeout=60.0)
+        with c._bill_lock:
+            c._bill_from_logs()
+        for job, dep_id in list(live.items()):
+            r.teardown(dep_id)
+            c.director.on_job_removed(job)
+        assert len(c.director.policy.groups) == 1   # shrunk to min_groups
+    assert not _serve_worker_threads(), "leaked serve workers"
+    assert not _dispatcher_threads(), "leaked dispatcher threads"
+    # ---- billing reconciles bit-for-bit across every migration
+    for job_id, rec in c.billing.items():
+        logged = sum(dt for dep_id, w in wpgs_ever.items()
+                     if w.spec.job_id == job_id for _, dt in w.exec_log)
+        assert rec.busy_seconds == pytest.approx(logged, rel=1e-9), job_id
+        assert rec.busy_seconds > 0.0, job_id
+    assert not r.pending
 
 
 def test_job_churn_against_live_serve_plane():
