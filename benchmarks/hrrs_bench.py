@@ -180,6 +180,25 @@ def _placement_decision_us(n_resident: int, seed: int = 0) -> tuple:
     return _time_us(cold_probe, iters=50), _time_us(warm_probe, iters=20)
 
 
+def _repack_plan_us(n_resident: int, seed: int = 0) -> float:
+    """Latency of ONE incremental repack planning pass
+    (``PlacementPolicy.plan_repack``) against a fleet hosting
+    ``n_resident`` placed jobs: the reconciler's periodic decision cost
+    (clone + per-job re-fit + interference deltas; no mutation)."""
+    horizon = 28_800.0
+    n_groups = max(4, n_resident // 4)
+    pol = PlacementPolicy(
+        [NodeGroup(g, 8, IntervalSet([(0.0, horizon)]))
+         for g in range(n_groups)],
+        PlacementConfig(horizon=horizon))
+    profiles = synthetic_job_mix(n_resident, seed=seed)
+    for i, p in enumerate(profiles):
+        pol.place_warm(f"res{i}", p.mean_trace())
+    iters = max(2, 64 // max(n_resident, 1))
+    return _time_us(lambda: pol.plan_repack(origin=0.0, min_gain=0.001),
+                    iters=iters)
+
+
 def _repack_migrate_s(nbytes: int = 8 << 20) -> float:
     """Wall-clock of ONE realized repack migration through
     ``Router.reassign_job``: admission hold, in-flight drain,
@@ -274,6 +293,13 @@ def run() -> list[tuple[str, float, str]]:
                      "micro-shift fit + interference rank"))
     rows.append(("placement/repack_migrate_s", _repack_migrate_s(),
                  "hold+drain+migrate(8MiB)+rehome, 16 queued ops"))
+    # reconciler: incremental repack PLANNING latency vs resident-job count
+    # (plan-only — the realized moves are priced by repack_migrate_s above,
+    # which also feeds the planner's migration-cost floor)
+    for n_res in (4, 16, 64):
+        rows.append((f"placement/repack_plan_n{n_res}_us",
+                     _repack_plan_us(n_res),
+                     f"plan_repack over {n_res} resident jobs"))
 
     # dispatch plane: cross-group overlap (4 groups x 6 x 10ms ops) and the
     # per-op control overhead of the concurrent driver on zero-cost ops
@@ -294,5 +320,17 @@ def run() -> list[tuple[str, float, str]]:
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+
+    from benchmarks.run import BENCH_JSON, write_bench_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=BENCH_JSON,
+                    help="machine-readable output path ('' disables)")
+    args = ap.parse_args()
+    rows = run()
+    for r in rows:
         print(r)
+    if args.json:
+        write_bench_json(rows, args.json)
+        print(f"wrote {args.json} ({len(rows)} rows)")

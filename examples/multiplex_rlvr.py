@@ -36,14 +36,27 @@ drained profiling group is retired. A later arrival finds no clean group
 and triggers a capacity-adjustment spawn. The director's decision log
 prints at the end.
 
+Part 5 (continuous reconciliation, §4.3.2's repacking loop — scripted on a
+VirtualClock so every decision is deterministic): two jobs consolidate onto
+one group, then one job's ROLLOUT PHASE DOUBLES mid-run (response lengths
+grow as the policy improves). The reconciler compares the rolling profile
+against the placed trace, detects the drift, re-profiles, re-fits — the
+grown cycle no longer coexists with its neighbour — spawns a group and
+live-migrates, with the whole detect -> re-profile -> repack -> migrate
+sequence in the director's decision log.
+
 Run:  PYTHONPATH=src python examples/multiplex_rlvr.py
 """
 import time
 
 import numpy as np
 
+from repro.core import api
 from repro.core.cluster import PlexCluster
+from repro.core.control_plane import DirectorConfig, PlacementDirector
 from repro.core.controller import JobConfig
+from repro.core.router import Router
+from repro.core.scheduler.executor import VirtualClock
 
 TINY = (("num_layers", 2), ("d_model", 48), ("num_heads", 4),
         ("num_kv_heads", 2), ("head_dim", 12), ("d_ff", 96),
@@ -83,6 +96,79 @@ def run(interleave: bool, n_groups: int = 1, concurrent: bool = False):
     billing = cluster.run(interleave=interleave, concurrent=concurrent)
     wall = time.time() - t0
     return cluster, billing, wall
+
+
+def part5_drift_reconciliation():
+    """Scripted VirtualClock demo of the reconciliation loop: jobA's
+    rollout doubles mid-run; the phase-drift trigger re-profiles, re-fits,
+    and live-migrates it, and the decision log shows every step."""
+    clock = VirtualClock()
+
+    class ScriptedWPG:
+        """Stub backend on the virtual clock: each op advances time by its
+        exec_estimate, so drift is scripted rather than measured."""
+
+        def __init__(self, spec, sm):
+            self.spec, self.sm, self.exec_log = spec, sm, []
+
+        @property
+        def job_prefix(self):
+            return f"{self.spec.job_id}:{self.spec.deployment_id}"
+
+        def resident(self):
+            return False
+
+        def ensure_resident(self):
+            return 0.0
+
+        def offload(self, to=None):
+            return 0.0
+
+        def execute(self, qop):
+            clock.advance(qop.exec_estimate)
+            self.exec_log.append((qop.op.value, qop.exec_estimate))
+            return None
+
+    router = Router(now=clock, wpg_factory=ScriptedWPG)
+    director = PlacementDirector(
+        router, DirectorConfig(horizon=300.0, cold_reserve_s=40.0,
+                               min_groups=1, warmup_cycles=0,
+                               drift_window=2, drift_ratio=1.8),
+        initial_groups=[0])
+    deps = {}
+    for job in ("epsilon", "zeta"):
+        gid = director.assign(job)
+        spec = api.DeploymentSpec(deployment_id=f"{job}-train", job_id=job,
+                                  model_name="stub", role="train")
+        deps[job] = router.deploy(spec, group_id=gid)
+
+    def run_cycle(job, phases):
+        prev, d = None, deps[job]
+        for op, dur in phases:
+            fn = getattr(d, op)
+            args = ((np.zeros((1, 2), np.int32),) if op == "generate"
+                    else (d,) if op == "sync_weights" else (0,))
+            prev = fn(*args, exec_estimate=dur,
+                      after=(prev,) if prev else ())
+        router.drain()
+        prev.result()
+        director.on_job_step(job)
+
+    for step in range(6):
+        rollout = 6.0 if step < 2 else 12.0     # epsilon's rollout DOUBLES
+        run_cycle("epsilon", [("generate", rollout),
+                              ("update_actor", 2.0 if step < 2 else 3.5)])
+        run_cycle("zeta", [("generate", 1.0), ("forward", 2.0),
+                           ("update_actor", 2.0), ("sync_weights", 1.0)])
+        clock.advance(0.25)
+    print("control-plane decision log (virtual time):")
+    for e in director.events:
+        print("  ", {k: (round(v, 3) if isinstance(v, float) else v)
+                     for k, v in e.items()})
+    plan = director.cluster_plan()
+    for a in plan.assignments:
+        print(f"{a.job_id}: group={a.group_id} shift={a.shift:.2f} "
+              f"period={a.trace.period:.1f}s (plan v{plan.version})")
 
 
 def main():
@@ -172,6 +258,10 @@ def main():
         print(f"{job}: phase={js.phase} group={js.group_id} "
               f"steps={rec.steps} billed "
               f"gpu_s/step={rec.gpu_seconds_per_step():.2f}")
+
+    print("\n=== Part 5: continuous reconciliation (drift -> re-profile -> "
+          "repack -> migrate) ===")
+    part5_drift_reconciliation()
 
     print("\nNOTE: on one CPU every op is compute-bound and XLA already"
           "\nsaturates all cores, so neither HRRS (Part 1) nor cross-group"

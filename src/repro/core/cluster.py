@@ -358,3 +358,18 @@ class PlexCluster:
         """Live re-placement: drain the job's in-flight ops, migrate its
         state, re-home its queued ops (billing stays continuous)."""
         return self.router.reassign_job(job_id, dst_group, timeout=timeout)
+
+    # ------------------------------------------------------ reconciliation
+    def reconcile(self, force: bool = True):
+        """Run the control plane's reconcile pass now (§4.3.2's repacking
+        loop): measure realized-vs-planned occupancy, plan an incremental
+        repack, and realize its moves as batched live migrations. The
+        per-step hooks run the same pass on its periodic cadence; this is
+        the explicit entry point for external control loops / operators.
+        Returns the list of realized moves."""
+        return self.director.reconcile_now(force=force)
+
+    def cluster_plan(self):
+        """The declarative desired state (job → (group, shift, trace) plus
+        the group set), versioned per placement change."""
+        return self.director.cluster_plan()

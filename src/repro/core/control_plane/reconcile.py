@@ -1,0 +1,148 @@
+"""The reconciliation loop: detect divergence between the realized schedule
+and the :class:`~repro.core.control_plane.plan.ClusterPlan`, and turn it
+into repack / re-profile / shed decisions (paper §4.3.2's "repack when the
+realized schedule diverges from the plan").
+
+Three triggers, all event-driven from job-step hooks (no timer thread, so
+the whole decision sequence replays bit-identically under a VirtualClock):
+
+1. **Occupancy drift** (periodic, every ``repack_interval_s``): the
+   executor's measured per-group busy windows
+   (``TaskExecutor.group_busy_since``) are overlapped with the plan's
+   predicted windows (``NodeGroup.planned_windows``). A group whose
+   realized execution falls mostly OUTSIDE its planned windows has drifted;
+   the policy plans an incremental repack
+   (:meth:`~repro.core.scheduler.placement.PlacementPolicy.plan_repack`)
+   whose moves carry predicted interference deltas and respect the
+   migration-cost floor.
+2. **Phase drift** (per job): the rolling cycle tail the profiler retains
+   is folded into a fresh trace and compared against the trace the job was
+   PLACED with. Period divergence beyond ``drift_ratio`` (either direction
+   — response lengths grow as policies improve, "RL in the Wild") re-fits
+   the job on the re-profiled trace.
+3. **Queue pressure** (per telemetry poll): a deep-queued group hosting
+   more than one warm job sheds its worst-interfering resident onto
+   another group (spawning a spare if none fits) instead of merely adding
+   idle capacity.
+
+The reconciler only *decides*; the director applies decisions to the
+placement state and realizes migrations through ``Router.reassign_jobs``.
+Scoring is shared with the offline simulator (``phase_interference`` /
+``least_interfering_group`` in ``scheduler/placement.py``) so predictions
+and the live loop can never disagree by construction.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.control_plane.plan import (DirectorConfig, JobTrace,
+                                           trace_from_cycles)
+from repro.core.scheduler.placement import (NodeGroup, Placed,
+                                            PlacementPolicy, RepackPlan,
+                                            phase_interference)
+
+
+class Reconciler:
+    """Drift detection + repack planning over one PlacementPolicy.
+
+    Owns the rolling state the triggers need (repack cadence anchor,
+    per-group busy-window cursors); holds no lock of its own — the director
+    serializes calls under its decision lock."""
+
+    def __init__(self, policy: PlacementPolicy, cfg: DirectorConfig):
+        self.policy = policy
+        self.cfg = cfg
+        self._last_repack_t: Optional[float] = None
+        self._busy_cursors: Dict[int, int] = {}
+
+    # ------------------------------------------- trigger 1: occupancy drift
+    def due(self, now: float) -> bool:
+        """Periodic gate: the first observation anchors the cadence."""
+        if self._last_repack_t is None:
+            self._last_repack_t = now
+            return False
+        return now - self._last_repack_t >= self.cfg.repack_interval_s
+
+    def occupancy_drift(self, executor) -> List[dict]:
+        """Realized-vs-planned busy overlap per group since the last check.
+        Returns the groups whose measured execution diverged from the plan
+        (overlap ratio below ``plan_overlap_min`` over at least
+        ``min_drift_busy_s`` of measured busy time)."""
+        drifted: List[dict] = []
+        for g in sorted(self.policy.groups, key=lambda g: g.group_id):
+            cursor = self._busy_cursors.get(g.group_id, 0)
+            windows = executor.group_busy_since(g.group_id, cursor)
+            if not windows:
+                continue
+            self._busy_cursors[g.group_id] = windows[-1][0]
+            busy = sum(t1 - t0 for _, _, t0, t1 in windows)
+            if busy < self.cfg.min_drift_busy_s:
+                continue
+            overlap = sum(min(g.planned_overlap(t0, t1), t1 - t0)
+                          for _, _, t0, t1 in windows)
+            ratio = overlap / busy
+            if ratio < self.cfg.plan_overlap_min:
+                drifted.append(dict(group=g.group_id,
+                                    busy_s=round(busy, 6),
+                                    overlap_ratio=round(ratio, 4)))
+        return drifted
+
+    def check(self, now: float, executor,
+              eligible: Optional[Sequence[int]] = None,
+              force: bool = False
+              ) -> Optional[Tuple[RepackPlan, List[dict]]]:
+        """The periodic reconcile pass: when due (or forced), measure
+        occupancy drift and — if any group diverged — plan an incremental
+        repack against the live absolute-time windows. Returns
+        ``(plan, drifted_groups)`` or None when nothing is due/diverged."""
+        if not force and not self.due(now):
+            return None
+        self._last_repack_t = now
+        drifted = self.occupancy_drift(executor)
+        if not drifted and not force:
+            return None
+        plan = self.policy.plan_repack(origin=now, groups=eligible,
+                                       min_gain=self.cfg.migration_floor_s)
+        return plan, drifted
+
+    # --------------------------------------------- trigger 2: phase drift
+    def phase_drift(self, cycles: Sequence[Dict[str, float]],
+                    placed_trace: Optional[JobTrace],
+                    nodes: int) -> Optional[Tuple[JobTrace, float]]:
+        """Compare the rolling cycle tail against the trace the job was
+        placed with; on divergence beyond ``drift_ratio`` return the
+        re-profiled trace and the observed ratio."""
+        cfg = self.cfg
+        if placed_trace is None or placed_trace.period <= 0.0:
+            return None
+        if len(cycles) < cfg.drift_window:
+            return None
+        recent = trace_from_cycles(cycles[-cfg.drift_window:], nodes)
+        if recent is None or recent.period <= 0.0:
+            return None
+        ratio = max(recent.period / placed_trace.period,
+                    placed_trace.period / recent.period)
+        if ratio < cfg.drift_ratio:
+            return None
+        return recent, ratio
+
+    # -------------------------------------------- trigger 3: queue pressure
+    def pick_shed(self, group: Optional[NodeGroup],
+                  exclude=frozenset()) -> Optional[Placed]:
+        """The worst-interfering warm resident of a deep-queued group — the
+        job a pressure-relief repack moves onto another group. None when
+        the group hosts fewer than two warm jobs (shedding the only job
+        just moves the queue). ``exclude`` skips jobs the director already
+        has a migration in flight for."""
+        if group is None:
+            return None
+        warm = [p for p in group.resident
+                if not p.once and p.job_id not in exclude]
+        if len(warm) < 2:
+            return None
+        scored = sorted(
+            warm,
+            key=lambda p: (-phase_interference(p.trace, p.shift, group,
+                                               p.origin, exclude=p.job_id),
+                           p.job_id))
+        return scored[0]

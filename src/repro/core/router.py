@@ -659,6 +659,46 @@ class Router:
             ex.release_job(job_id)
         return moved
 
+    def reassign_jobs(self, moves, timeout: float = 120.0) -> List[tuple]:
+        """Realize a batched migration plan (the §4.3.2 repack loop's
+        output): each move runs through the :meth:`reassign_job`
+        hold → drain → migrate → rehome path, in *dependency order* —
+        a move INTO a group is executed after moves OUT of it
+        (vacate-before-fill), so a swap never transiently double-books a
+        destination. A cyclic batch (pure swap) is broken deterministically
+        at the lowest job id; group residency is time-multiplexed, so the
+        one overlapping tenancy that creates is safe.
+
+        A failing move is captured in its result slot and the remaining
+        moves still execute: the plan is realized partially, but every
+        executed move is complete and consistent (the caller rolls the
+        failed job's *placement* back). Returns ``(move, moved_bytes,
+        error)`` tuples in execution order; ``moves`` may be any objects
+        with ``job_id`` / ``src_group`` / ``dst_group`` attributes (e.g.
+        :class:`~repro.core.scheduler.placement.JobMove`)."""
+        remaining = sorted(moves, key=lambda m: m.job_id)
+        ordered = []
+        while remaining:
+            pick = None
+            for m in remaining:
+                if not any(o.src_group == m.dst_group
+                           for o in remaining if o is not m):
+                    pick = m
+                    break
+            if pick is None:           # cycle: every dst is someone's src
+                pick = remaining[0]
+            remaining.remove(pick)
+            ordered.append(pick)
+        results: List[tuple] = []
+        for m in ordered:
+            try:
+                moved = self.reassign_job(m.job_id, m.dst_group,
+                                          timeout=timeout)
+                results.append((m, moved, None))
+            except Exception as e:  # noqa: BLE001 - per-move isolation
+                results.append((m, 0, e))
+        return results
+
     # -------------------------------------------------- bounded driver
     def run_until_idle(self, timeout: Optional[float] = None) -> int:
         """A bounded session of the dispatch plane: the same per-group

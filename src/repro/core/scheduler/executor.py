@@ -174,6 +174,11 @@ class TaskExecutor:
         self.phase_window = phase_window
         self.phase_log: Dict[str, Deque[PhaseRecord]] = {}
         self._phase_seq = 0
+        # Per-group REALIZED busy windows (seq, job_id, t_started,
+        # t_finished), bounded per group: the reconciler overlaps these with
+        # the plan's predicted windows so occupancy drift is measured, not
+        # only predicted.
+        self.group_busy_log: Dict[int, Deque[tuple]] = {}
         # Live per-group telemetry the capacity adjuster polls.
         self.queued_count: Dict[int, int] = {}
         self.group_busy: Dict[int, float] = {}
@@ -358,6 +363,12 @@ class TaskExecutor:
                 log.append(PhaseRecord(self._phase_seq, task.request.op,
                                        task.group_id, task.t_started,
                                        task.t_finished))
+                blog = self.group_busy_log.get(task.group_id)
+                if blog is None:
+                    blog = self.group_busy_log[task.group_id] = \
+                        collections.deque(maxlen=self.phase_window)
+                blog.append((self._phase_seq, task.request.job_id,
+                             task.t_started, task.t_finished))
             # The Task record is kept for telemetry (states, timings), but
             # the operation payload (args may hold whole rollout batches) is
             # only reachable through the future from here on — retaining it
@@ -492,6 +503,7 @@ class TaskExecutor:
             self._indexes.pop(group_id, None)
             self.queued_count.pop(group_id, None)
             self.group_busy.pop(group_id, None)
+            self.group_busy_log.pop(group_id, None)
             self.group_t_load.pop(group_id, None)
             self.group_t_offload.pop(group_id, None)
 
@@ -507,6 +519,16 @@ class TaskExecutor:
             if not log:
                 return []
             return [r for r in log if r.seq > seq]
+
+    def group_busy_since(self, group_id: int, seq: int) -> List[tuple]:
+        """REALIZED busy windows ``(seq, job_id, t_started, t_finished)`` on
+        one group newer than ``seq`` — the reconciler's cursor read for
+        measured-vs-planned occupancy drift."""
+        with self.cv:
+            log = self.group_busy_log.get(group_id)
+            if not log:
+                return []
+            return [r for r in log if r[0] > seq]
 
     # ------------------------------------------------------------ queries
     def outstanding(self) -> int:

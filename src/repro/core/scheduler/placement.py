@@ -79,9 +79,12 @@ class NodeGroup:
         """Retire capacity behind ``now``: the past cannot be allocated."""
         self.free.trim_before(now)
 
-    def carve_resident(self, p: "Placed", lo: float, hi: float):
-        """Subtract ``p``'s planned windows intersecting [lo, hi) from the
-        free set (idempotent: already-busy spans stay busy)."""
+    @staticmethod
+    def _projected(p: "Placed", lo: float, hi: float):
+        """Yield ``p``'s planned busy windows clipped to [lo, hi): the
+        periodic projection of its trace segments from its anchor (one-shot
+        cold reservations do not repeat). Single source of truth for both
+        the free-set carving and the reconciler's drift measurement."""
         period = p.trace.period
         if period <= 0.0:
             return
@@ -94,10 +97,16 @@ class NodeGroup:
             for a, d in p.trace.segments:
                 s, e = base + a, base + a + d
                 if e > lo and s < hi:
-                    self.free.subtract(max(s, lo), min(e, hi))
+                    yield (max(s, lo), min(e, hi))
             if p.once:
-                break                 # one-shot reservations do not repeat
+                break
             c += 1
+
+    def carve_resident(self, p: "Placed", lo: float, hi: float):
+        """Subtract ``p``'s planned windows intersecting [lo, hi) from the
+        free set (idempotent: already-busy spans stay busy)."""
+        for s, e in self._projected(p, lo, hi):
+            self.free.subtract(s, e)
 
     def extend_to(self, new_end: float):
         """Roll the planning horizon forward to ``new_end``: the new span is
@@ -111,6 +120,23 @@ class NodeGroup:
             self.carve_resident(p, old_end, new_end)
         self.horizon_end = new_end
 
+    def planned_windows(self, lo: float, hi: float) -> List[Tuple[float, float]]:
+        """The PLAN's predicted busy windows over [lo, hi): the union of
+        every resident's projected segments (merged, clipped). The live
+        reconciler compares measured execution against this to detect
+        realized-vs-planned occupancy drift."""
+        out: List[Tuple[float, float]] = []
+        for p in self.resident:
+            out.extend(self._projected(p, lo, hi))
+        return IntervalSet(out).intervals()
+
+    def planned_overlap(self, t0: float, t1: float) -> float:
+        """Seconds of [t0, t1) covered by the plan's predicted busy windows."""
+        total = 0.0
+        for s, e in self.planned_windows(t0, t1):
+            total += max(0.0, min(e, t1) - max(s, t0))
+        return total
+
 
 @dataclasses.dataclass
 class Placed:
@@ -121,6 +147,41 @@ class Placed:
     origin: float = 0.0                # absolute time of cycle 0's start
     once: bool = False                 # one-shot reservation (cold profiling)
     n_cycles: int = 0                  # cycles actually allocated
+
+
+@dataclasses.dataclass(frozen=True)
+class JobMove:
+    """One planned live migration: re-fit ``job_id`` from ``src_group`` to
+    ``dst_group`` at the new anchor (origin + shift). Carries the predicted
+    interference delta and the pre-move placement so a failed realization
+    can roll back exactly."""
+    job_id: str
+    src_group: int
+    dst_group: int
+    shift: float
+    origin: float = 0.0
+    gain: float = 0.0              # predicted interference reduction (s)
+    vacates: bool = False          # last resident leaving src (consolidation)
+    src_shift: float = 0.0
+    src_origin: float = 0.0
+    n_cycles: int = 0
+
+
+@dataclasses.dataclass
+class RepackPlan:
+    """Result of :meth:`PlacementPolicy.plan_repack`: an ordered set of job
+    moves (with predicted interference deltas) plus the same-group
+    re-anchors, computed WITHOUT mutating the live placement state. Apply
+    with :meth:`PlacementPolicy.apply_repack`, realize the moves through
+    ``Router.reassign_jobs``."""
+    origin: float
+    moves: Tuple[JobMove, ...] = ()
+    reshifts: Tuple[str, ...] = ()      # jobs re-anchored on their own group
+    skipped: Tuple[JobMove, ...] = ()   # gain below the migration-cost floor
+    fitted: Optional["PlacementPolicy"] = None   # the re-fitted state
+
+    def __bool__(self) -> bool:
+        return bool(self.moves or self.reshifts)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,11 +233,18 @@ def best_shift(trace: JobTrace, free: IntervalSet,
 
 
 def phase_interference(trace: JobTrace, shift: float,
-                       group: NodeGroup, origin: float = 0.0) -> float:
+                       group: NodeGroup, origin: float = 0.0,
+                       exclude: Optional[str] = None) -> float:
     """Predicted overlap of the shifted active segments with resident jobs'
-    active segments over one hyper-cycle (lower = better, §4.3.2)."""
+    active segments over one hyper-cycle (lower = better, §4.3.2).
+
+    ``exclude`` skips one resident by job id — the form used when scoring a
+    job that is itself already placed on the group (repack / shed ranking).
+    """
     total = 0.0
     for placed in group.resident:
+        if exclude is not None and placed.job_id == exclude:
+            continue
         for a, d in trace.segments:
             s0 = (origin + a + shift) % placed.trace.period
             for ra, rd in placed.trace.segments:
@@ -185,6 +253,29 @@ def phase_interference(trace: JobTrace, shift: float,
                 hi = min(s0 + d, rs + rd)
                 total += max(0.0, hi - lo)
     return total
+
+
+def group_duty(group: NodeGroup) -> float:
+    """Aggregate duty demand of a group's residents in node-duty units."""
+    return sum(p.trace.duty() * p.trace.nodes for p in group.resident)
+
+
+def least_interfering_group(trace: JobTrace, groups: Sequence[NodeGroup],
+                            duty_cap: float = 1.0,
+                            origin: float = 0.0) -> Optional[NodeGroup]:
+    """Shared §4.3.2 ranking consumed by BOTH the offline simulator
+    (``ClusterSim._choose_group``) and the live reconciler: the group
+    minimising (predicted phase interference, duty load, id) among those
+    with duty headroom for the trace. None when no group has headroom."""
+    best, best_key = None, None
+    for g in groups:
+        duty = group_duty(g)
+        if duty + trace.duty() * trace.nodes > g.nodes * duty_cap:
+            continue
+        key = (phase_interference(trace, 0.0, g, origin), duty, g.group_id)
+        if best_key is None or key < best_key:
+            best, best_key = g, key
+    return best
 
 
 class PlacementPolicy:
@@ -248,11 +339,19 @@ class PlacementPolicy:
 
     def place_warm(self, job_id: str, trace: JobTrace,
                    n_cycles: Optional[int] = None, origin: float = 0.0,
-                   groups: Optional[Sequence[int]] = None) -> Optional[Placed]:
-        """Warm start: micro-shift trace fitting over eligible groups."""
+                   groups: Optional[Sequence[int]] = None,
+                   pack: bool = False,
+                   prefer: Optional[int] = None) -> Optional[Placed]:
+        """Warm start: micro-shift trace fitting over eligible groups.
+
+        ``pack`` breaks score ties toward groups already hosting residents
+        (repacking density) and ``prefer`` toward one group id (a repack
+        keeping a job where it is costs no migration); both only reorder
+        EQUAL (cost, interference) candidates, so default fits are
+        unchanged."""
         cfg = self.cfg
         n_cycles = n_cycles or max(1, int(cfg.horizon // trace.period))
-        scored: List[Tuple[float, float, NodeGroup, float]] = []
+        scored: List[Tuple[tuple, NodeGroup, float]] = []
         for g in self._eligible(groups):
             if g.nodes < trace.nodes:
                 continue
@@ -261,11 +360,15 @@ class PlacementPolicy:
                 continue
             delta, cost = fit
             interf = phase_interference(trace, delta, g, origin)
-            scored.append((cost, interf, g, delta))
+            key = (round(cost, 6), interf,
+                   -len(g.resident) if pack else 0,
+                   0 if g.group_id == prefer else 1,
+                   g.group_id)
+            scored.append((key, g, delta))
         if not scored:
             return None
-        scored.sort(key=lambda t: (round(t[0], 6), t[1], t[2].group_id))
-        cost, _, g, delta = scored[0]
+        scored.sort(key=lambda t: t[0])
+        _, g, delta = scored[0]
         for c in range(n_cycles):
             base = origin + c * trace.period + delta
             for a, d in trace.segments:
@@ -280,6 +383,45 @@ class PlacementPolicy:
         g.resident.append(p)
         self.placed[job_id] = p
         return p
+
+    def place_at(self, job_id: str, trace: JobTrace, group_id: int,
+                 shift: float, origin: float = 0.0, n_cycles: int = 0,
+                 once: bool = False) -> Placed:
+        """Pin a job at an EXACT (group, shift, origin) — no search. Used to
+        restore a placement (failed-migration rollback, plan restore) and to
+        realize a planned assignment verbatim. Windows are carved with
+        ``subtract`` so re-pinning over partially measured spans is safe."""
+        g = self._by_id[group_id]
+        n = n_cycles or max(1, int(self.cfg.horizon
+                                   // max(trace.period, 1e-9)))
+        for c in range(n):
+            base = origin + c * trace.period + shift
+            for a, d in trace.segments:
+                g.free.subtract(base + a, base + a + d)
+            if once:
+                break
+        p = Placed(job_id, trace, group_id, shift, origin=origin, once=once,
+                   n_cycles=n)
+        g.resident.append(p)
+        self.placed[job_id] = p
+        return p
+
+    def clone(self) -> "PlacementPolicy":
+        """Deep copy of the placement state (free windows, residents,
+        placed map). ``Placed`` records are shared — they are treated as
+        immutable everywhere — so a clone is cheap: two float lists per
+        group. ``plan_repack`` fits against a clone so planning never
+        mutates the live state."""
+        groups = []
+        for g in self.groups:
+            c = NodeGroup(g.group_id, g.nodes,
+                          IntervalSet(g.free.intervals()),
+                          resident=list(g.resident),
+                          horizon_end=g.horizon_end)
+            groups.append(c)
+        out = PlacementPolicy(groups, self.cfg)
+        out.placed = dict(self.placed)
+        return out
 
     # ------------------------------------------------------------ remove
     def remove(self, job_id: str, n_cycles: Optional[int] = None):
@@ -315,21 +457,84 @@ class PlacementPolicy:
             g.carve_resident(other, freed_from, g.horizon_end)
 
     # ----------------------------------------------------------- repack
-    def repack(self, origin: float = 0.0,
-               groups: Optional[Sequence[int]] = None) -> int:
-        """Repacking event (§4.3.2): re-fit all placed jobs by descending
-        duty ratio. Returns the number of jobs that moved."""
-        jobs = sorted(self.placed.items(),
-                      key=lambda kv: -kv[1].trace.duty())
-        for job_id, _ in jobs:
-            self.remove(job_id)
-        moved = 0
+    def plan_repack(self, origin: float = 0.0,
+                    groups: Optional[Sequence[int]] = None,
+                    min_gain: float = 0.0) -> RepackPlan:
+        """Plan a repacking event (§4.3.2) WITHOUT mutating the live state.
+
+        Jobs are re-fitted one at a time on a clone, by descending duty
+        ratio, against live absolute-time windows (``origin`` = now). The
+        result is an ordered migration plan: group-changing moves carry
+        their predicted interference delta, and a move whose gain is below
+        ``min_gain`` (the migration-cost floor, fed from the measured
+        ``placement/repack_migrate_s`` bench) is skipped — unless it vacates
+        its source group, since retiring a whole group always beats a
+        millisecond-scale migration. One-shot cold reservations are pinned
+        and never repacked."""
+        clone = self.clone()
+        for g in clone.groups:
+            g.advance_to(origin)
+        jobs = sorted(((j, p) for j, p in clone.placed.items() if not p.once),
+                      key=lambda kv: (-kv[1].trace.duty(), kv[0]))
+        moves: List[JobMove] = []
+        reshifts: List[str] = []
+        skipped: List[JobMove] = []
         for job_id, old in jobs:
-            p = self.place_warm(job_id, old.trace, origin=origin,
-                                groups=groups)
-            if p is None:  # should not happen: it fitted before
-                p = self.place_warm(job_id, old.trace, n_cycles=1,
-                                    origin=origin, groups=groups)
-            if p and (p.group_id != old.group_id or p.shift != old.shift):
-                moved += 1
-        return moved
+            g_old = clone.group(old.group_id)
+            if g_old is None:
+                continue
+            before = phase_interference(old.trace, old.shift, g_old,
+                                        old.origin, exclude=job_id)
+            was_last = len(g_old.resident) == 1
+            clone.remove(job_id)
+            p = clone.place_warm(job_id, old.trace,
+                                 n_cycles=old.n_cycles or None,
+                                 origin=origin, groups=groups,
+                                 pack=True, prefer=old.group_id)
+            if p is None:
+                clone.place_at(job_id, old.trace, old.group_id, old.shift,
+                               origin=old.origin, n_cycles=old.n_cycles)
+                continue
+            if p.group_id == old.group_id:
+                if p.shift != old.shift or p.origin != old.origin:
+                    reshifts.append(job_id)
+                continue
+            after = phase_interference(old.trace, p.shift,
+                                       clone.group(p.group_id), origin,
+                                       exclude=job_id)
+            move = JobMove(job_id, old.group_id, p.group_id, p.shift,
+                           origin=origin, gain=before - after,
+                           vacates=was_last, src_shift=old.shift,
+                           src_origin=old.origin, n_cycles=p.n_cycles)
+            if not move.vacates and move.gain < min_gain:
+                clone.remove(job_id)
+                clone.place_at(job_id, old.trace, old.group_id, old.shift,
+                               origin=old.origin, n_cycles=old.n_cycles)
+                skipped.append(move)
+            else:
+                moves.append(move)
+        return RepackPlan(origin, tuple(moves), tuple(reshifts),
+                          tuple(skipped), fitted=clone)
+
+    def apply_repack(self, plan: RepackPlan):
+        """Adopt a plan's re-fitted placement state. Call under the same
+        lock / quiescence the plan was computed under — the plan's windows
+        are a re-fit of the state as of ``plan.origin``."""
+        if plan.fitted is None:
+            raise ValueError("plan has no fitted state (already applied?)")
+        src = plan.fitted
+        self.groups = src.groups
+        self._by_id = src._by_id
+        self.placed = src.placed
+        plan.fitted = None
+
+    def repack(self, origin: float = 0.0,
+               groups: Optional[Sequence[int]] = None,
+               min_gain: float = 0.0) -> int:
+        """Repacking event (§4.3.2), plan-then-apply: re-fit all placed jobs
+        by descending duty ratio. Returns the number of jobs whose
+        assignment changed (moved groups or re-anchored)."""
+        plan = self.plan_repack(origin=origin, groups=groups,
+                                min_gain=min_gain)
+        self.apply_repack(plan)
+        return len(plan.moves) + len(plan.reshifts)

@@ -28,7 +28,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.scheduler.placement import (
-    JobTrace, NodeGroup, PlacementConfig, PlacementPolicy, phase_interference)
+    JobTrace, NodeGroup, PlacementConfig, PlacementPolicy, group_duty,
+    least_interfering_group)
 from repro.core.scheduler.intervals import IntervalSet
 from repro.core.traces import PhaseProfile
 
@@ -158,8 +159,7 @@ class ClusterSim:
         if self.policy == "pack":
             # densest-first: the most-loaded group that still fits
             def load(g: _Group):
-                return sum(p.trace.duty() * p.trace.nodes
-                           for p in self.placer.groups[g.gid].resident)
+                return group_duty(self.placer.groups[g.gid])
             cands = [g for g in self.groups if g.capacity >= job.profile.nodes]
             cands.sort(key=lambda g: (-load(g), g.gid))
             for g in cands:
@@ -168,21 +168,16 @@ class ClusterSim:
                     break
             else:
                 g = min(self.groups, key=load)
-        else:  # spread / spread_backfill: min predicted interference
-            best, best_key = None, None
-            for g in self.groups:
-                pg = self.placer.groups[g.gid]
-                duty = sum(p.trace.duty() * p.trace.nodes for p in pg.resident)
-                if duty + trace.duty() * trace.nodes > g.capacity * self.duty_cap:
-                    continue
-                interf = phase_interference(trace, 0.0, pg)
-                key = (interf, duty, g.gid)
-                if best_key is None or key < best_key:
-                    best, best_key = g, key
-            g = best if best is not None else min(
-                self.groups, key=lambda gg: sum(
-                    p.trace.duty() * p.trace.nodes
-                    for p in self.placer.groups[gg.gid].resident))
+        else:
+            # spread / spread_backfill: min predicted interference — the
+            # SAME ranking (placement.least_interfering_group) the live
+            # reconciler uses, so simulation and the serve plane can never
+            # disagree on this scoring
+            ng = least_interfering_group(trace, self.placer.groups,
+                                         duty_cap=self.duty_cap)
+            g = (self.groups[ng.group_id] if ng is not None
+                 else min(self.groups, key=lambda gg: group_duty(
+                     self.placer.groups[gg.gid])))
         from repro.core.scheduler.placement import Placed
         self.placer.groups[g.gid].resident.append(
             Placed(job.job_id, trace, g.gid, 0.0))

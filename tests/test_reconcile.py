@@ -1,0 +1,494 @@
+"""The continuous reconciliation loop (control_plane/ package): plan/realize
+architecture, drift-aware re-profiling, periodic repack, and batched live
+migration.
+
+Covers:
+- ``PlacementPolicy.plan_repack``: non-mutating planning, predicted
+  interference deltas, the migration-cost floor (below-floor moves are
+  skipped unless they vacate a group), ``apply_repack`` adoption,
+- ``Router.reassign_jobs``: dependency (vacate-before-fill) ordering and
+  per-move failure isolation,
+- the executor's per-group realized busy-window log and the reconciler's
+  realized-vs-planned occupancy-drift detection,
+- the ``ClusterPlan`` declarative snapshot (versioning, diff),
+- the acceptance flows: a warm job whose rollout duration doubles mid-run
+  is detected, re-profiled, re-fitted, and live-migrated — billing
+  conserved bit-for-bit, decision sequence replaying bit-identically under
+  VirtualClock — and a scripted 3-group pressure scenario where a batched
+  repack consolidates (group retired) while queue pressure sheds a job
+  onto a spawned spare,
+- regression: a job stuck cold (degenerate cycles) keeps a bounded cycle
+  history (the ``_fold`` trim previously skipped cold jobs).
+"""
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.control_plane import (ClusterPlan, DirectorConfig,
+                                      PlacementDirector, Reconciler,
+                                      plan_from_policy)
+from repro.core.router import Router
+from repro.core.scheduler import hrrs
+from repro.core.scheduler.executor import TaskExecutor, VirtualClock
+from repro.core.scheduler.intervals import IntervalSet
+from repro.core.scheduler.placement import (JobMove, JobTrace, NodeGroup,
+                                            PlacementConfig, PlacementPolicy)
+from test_control_plane import _grpo_cycle, _spec, _virtual_router
+
+
+def _policy(n_groups=3, horizon=400.0):
+    return PlacementPolicy(
+        [NodeGroup(g, 1, IntervalSet([(0.0, horizon)]))
+         for g in range(n_groups)],
+        PlacementConfig(horizon=horizon))
+
+
+# ------------------------------------------------------------ plan_repack
+def test_plan_repack_is_non_mutating_and_apply_adopts():
+    pol = _policy(3)
+    # two phase-compatible period-8 jobs parked on separate groups
+    a = pol.place_at("jobA", JobTrace(8.0, ((6.0, 2.0),)), 0, 0.0)
+    b = pol.place_at("jobB", JobTrace(8.0, ((1.0, 3.0),)), 1, 0.0)
+    assert a and b
+    before = {j: (p.group_id, p.shift) for j, p in pol.placed.items()}
+    plan = pol.plan_repack(origin=0.0)
+    # planning must not have touched the live state
+    assert {j: (p.group_id, p.shift) for j, p in pol.placed.items()} == before
+    # the lower-duty job consolidates onto the other's group (pack-first
+    # tie-break), vacating its own — kept regardless of the gain floor
+    assert len(plan.moves) == 1
+    mv = plan.moves[0]
+    assert mv.vacates and mv.src_group != mv.dst_group
+    pol.apply_repack(plan)
+    moved = pol.placed[mv.job_id]
+    assert moved.group_id == mv.dst_group
+    # one group now hosts both, reservations disjoint
+    g = pol.group(mv.dst_group)
+    assert len(g.resident) == 2
+
+
+def test_plan_repack_skips_below_floor_moves():
+    pol = _policy(2)
+    # "noisy" and "quiet" force-pinned onto the SAME group with overlapping
+    # anchors (place_at skips feasibility — the scripted drifted state)
+    pol.place_at("noisy", JobTrace(8.0, ((0.0, 4.0),)), 0, 0.0)
+    pol.place_at("quiet", JobTrace(8.0, ((1.0, 2.0),)), 0, 0.0)
+    # an infinite floor: the interference-reducing separation moves do not
+    # vacate the group (the other job stays behind), so both are skipped
+    plan = pol.plan_repack(origin=0.0, min_gain=float("inf"))
+    assert not plan.moves
+    assert plan.skipped and all(m.gain > 0.0 for m in plan.skipped)
+    assert {p.group_id for p in pol.placed.values()} == {0}
+    # with a zero floor the separation happens: the higher-duty job moves
+    # to the empty group carrying its predicted interference delta
+    plan = pol.plan_repack(origin=0.0, min_gain=0.0)
+    assert len(plan.moves) == 1
+    mv = plan.moves[0]
+    assert mv.job_id == "noisy" and mv.dst_group == 1 and mv.gain > 0.0
+    pol.apply_repack(plan)
+    assert {p.group_id for p in pol.placed.values()} == {0, 1}
+
+
+def test_repack_compat_wrapper_counts_changes():
+    pol = _policy(2)
+    pol.place_at("jobA", JobTrace(8.0, ((6.0, 2.0),)), 0, 0.0)
+    pol.place_at("jobB", JobTrace(8.0, ((1.0, 3.0),)), 1, 0.0)
+    moved = pol.repack(origin=0.0)
+    assert moved >= 1 and len(pol.placed) == 2
+    gids = {p.group_id for p in pol.placed.values()}
+    assert len(gids) == 1              # consolidated
+
+
+# ------------------------------------------------------------ cluster plan
+def test_cluster_plan_snapshot_and_diff():
+    pol = _policy(2)
+    pol.place_at("jobA", JobTrace(8.0, ((6.0, 2.0),)), 0, 0.0)
+    p1 = plan_from_policy(pol, 1, 0.0)
+    assert p1.groups == (0, 1)
+    assert p1.assignment("jobA").group_id == 0
+    pol.repack(origin=0.0)
+    pol.place_at("jobB", JobTrace(8.0, ((1.0, 3.0),)), 1, 0.0)
+    p2 = plan_from_policy(pol, 2, 1.0)
+    d = p1.diff(p2)
+    assert "jobB" in d and d["jobB"][0] is None
+    assert "jobA" not in d             # unmoved by that repack
+
+
+def test_director_cluster_plan_versions_on_change():
+    clock, router = _virtual_router()
+    director = PlacementDirector(router, DirectorConfig(horizon=200.0),
+                                 initial_groups=[0])
+    p1 = director.cluster_plan()
+    assert isinstance(p1, ClusterPlan)
+    assert director.cluster_plan().version == p1.version   # cached
+    director.assign("jobA")
+    p2 = director.cluster_plan()
+    assert p2.version > p1.version
+    assert p2.assignment("jobA") is not None and p2.assignment("jobA").once
+
+
+# -------------------------------------------------------- batched realize
+def test_reassign_jobs_vacate_before_fill_order():
+    clock, router = _virtual_router()
+    depA = router.deploy(_spec("jobA"), group_id=0)
+    depB = router.deploy(_spec("jobB", "jobB-train"), group_id=1)
+    for g, dep in ((0, depA), (1, depB)):
+        sm = router.state_managers[g]
+        wpg = router.wpgs[dep.spec.deployment_id]
+        sm.register(wpg.job_prefix, {"w": np.ones((4, 4), np.float32)})
+    router.ensure_group(2)
+    # A fills g1, which B must vacate first (B -> g2 before A -> g1)
+    moves = [JobMove("jobA", 0, 1, 0.0), JobMove("jobB", 1, 2, 0.0)]
+    results = router.reassign_jobs(moves)
+    assert [r[0].job_id for r in results] == ["jobB", "jobA"]
+    assert all(err is None for _, _, err in results)
+    assert all(moved > 0 for _, moved, _ in results)
+    assert router.group_of["jobA-train"] == 1
+    assert router.group_of["jobB-train"] == 2
+
+
+def test_reassign_jobs_swap_cycle_and_failure_isolation():
+    clock, router = _virtual_router()
+    router.deploy(_spec("jobA"), group_id=0)
+    router.deploy(_spec("jobB", "jobB-train"), group_id=1)
+    # a pure swap is a dependency cycle: broken deterministically, both
+    # moves still execute
+    res = router.reassign_jobs([JobMove("jobA", 0, 1, 0.0),
+                                JobMove("jobB", 1, 0, 0.0)])
+    assert [r[0].job_id for r in res] == ["jobA", "jobB"]
+    assert router.group_of["jobA-train"] == 1
+    assert router.group_of["jobB-train"] == 0
+    # one failing move must not poison the rest of the batch
+    orig = router.reassign_job
+
+    def flaky(job_id, dst, timeout=120.0):
+        if job_id == "jobA":
+            raise TimeoutError("quiesce timeout")
+        return orig(job_id, dst, timeout=timeout)
+
+    router.reassign_job = flaky
+    res = router.reassign_jobs([JobMove("jobA", 1, 0, 0.0),
+                                JobMove("jobB", 0, 1, 0.0)])
+    by_job = {r[0].job_id: r for r in res}
+    assert isinstance(by_job["jobA"][2], TimeoutError)
+    assert by_job["jobB"][2] is None
+    assert router.group_of["jobB-train"] == 1
+    assert router.group_of["jobA-train"] == 1   # untouched by the failure
+
+
+# ------------------------------------------- realized busy-window telemetry
+def test_executor_group_busy_log_and_cursor():
+    clock = VirtualClock()
+    ex = TaskExecutor(now=clock, policy="hrrs", phase_window=8)
+    for i in range(1, 13):
+        t = ex.submit(hrrs.Request(req_id=i, job_id="j", op="forward",
+                                   exec_time=1.0, arrival_time=clock.now()),
+                      group_id=0)
+        assert ex.try_start(t)
+        clock.advance(2.0)
+        ex.finish(t)
+    log = ex.group_busy_since(0, 0)
+    assert len(log) == 8                       # bounded by phase_window
+    seq, job, t0, t1 = log[-1]
+    assert job == "j" and t1 - t0 == 2.0
+    assert ex.group_busy_since(0, seq) == []   # cursor consumed everything
+    ex.drop_group(0)
+    assert ex.group_busy_since(0, 0) == []
+
+
+def test_occupancy_drift_detection():
+    """Realized busy windows landing OUTSIDE the plan's predicted windows
+    must flag the group as drifted; execution matching the plan must not."""
+    clock = VirtualClock()
+    ex = TaskExecutor(now=clock, policy="hrrs")
+    pol = _policy(1, horizon=400.0)
+    # plan says: busy [6, 8) every 8s
+    pol.place_at("jobA", JobTrace(8.0, ((6.0, 2.0),)), 0, 0.0)
+    cfg = DirectorConfig(repack_interval_s=10.0, min_drift_busy_s=1.0,
+                         plan_overlap_min=0.5)
+    rec = Reconciler(pol, cfg)
+
+    def run_op(start, dur):
+        if start > clock.now():
+            clock.advance(start - clock.now())
+        t = ex.submit(hrrs.Request(req_id=len(ex.tasks) + 1, job_id="jobA",
+                                   op="update_actor", exec_time=dur,
+                                   arrival_time=clock.now()), group_id=0)
+        assert ex.try_start(t)
+        clock.advance(dur)
+        ex.finish(t)
+
+    # cycle 0+1 execute exactly as planned
+    run_op(6.0, 2.0)
+    run_op(14.0, 2.0)
+    assert rec.due(clock.now()) is False       # first call anchors cadence
+    assert rec.occupancy_drift(ex) == []
+    # the realized schedule slips: execution lands in the planned gaps
+    run_op(17.0, 2.0)
+    run_op(25.0, 2.0)
+    clock.advance(10.0)
+    assert rec.due(clock.now())
+    drifted = rec.occupancy_drift(ex)
+    assert drifted and drifted[0]["group"] == 0
+    assert drifted[0]["overlap_ratio"] < 0.5
+
+
+# -------------------------------------------------- cold-job fold trim
+def test_fold_keeps_cold_job_cycles_bounded():
+    """Regression: a job that never promotes (degenerate zero-duration
+    cycles make ``trace_from_cycles`` return None) used to accumulate one
+    cycle dict per step forever — cold jobs must be trimmed to the same
+    bounded window as warm ones."""
+    clock, router = _virtual_router()
+    cfg = DirectorConfig(horizon=200.0, warmup_cycles=0, cold_cycles=1,
+                         drift_window=4)
+    director = PlacementDirector(router, cfg, initial_groups=[0, 1])
+    gid = director.assign("jobA")
+    dep = router.deploy(_spec("jobA"), group_id=gid)
+    for _ in range(40):
+        gen = dep.generate(np.zeros((1, 2), np.int32), exec_estimate=0.0)
+        upd = dep.update_actor(0, exec_estimate=0.0, after=(gen,))
+        router.drain()
+        gen.result(), upd.result()
+        director.on_job_step("jobA")
+    js = director.job_state("jobA")
+    assert js.phase == "cold"                  # degenerate: never promoted
+    keep = cfg.warmup_cycles + cfg.cold_cycles + max(8, cfg.drift_window)
+    assert len(js.cycles) <= keep
+    assert js.cycles, "cycles must still fold (only the history is bounded)"
+
+
+# ------------------------------------------------ acceptance: drift e2e
+def _drift_flow():
+    """Cold-profile two jobs, consolidate them warm onto one group, then
+    DOUBLE jobA's rollout duration mid-run (its update grows with the
+    longer responses too): the reconciler must detect the phase drift,
+    re-profile, re-fit — the grown cycle no longer fits beside jobB's
+    dense 4-phase cycle — spawn a group, and live-migrate, all
+    deterministically under VirtualClock."""
+    clock, router = _virtual_router()
+    director = PlacementDirector(
+        router, DirectorConfig(horizon=300.0, cold_reserve_s=40.0,
+                               min_groups=1, warmup_cycles=0,
+                               drift_window=2, drift_ratio=1.8,
+                               repack_interval_s=1e9),
+        initial_groups=[0])
+    deps, ordinal = {}, {}
+
+    def add(job):
+        gid = director.assign(job)
+        deps[job] = router.deploy(_spec(job, f"{job}-train"), group_id=gid)
+
+    def track(*futs):
+        for f in futs:
+            ordinal[f.sources[0]] = len(ordinal)
+        router.drain()
+        for f in futs:
+            f.result()
+
+    def step_a(rollout, update):
+        gen = deps["jobA"].generate(np.zeros((1, 2), np.int32),
+                                    exec_estimate=rollout)
+        upd = deps["jobA"].update_actor(0, exec_estimate=update,
+                                        after=(gen,))
+        track(gen, upd)
+        director.on_job_step("jobA")
+
+    def step_b():
+        d = deps["jobB"]
+        gen = d.generate(np.zeros((1, 2), np.int32), exec_estimate=1.0)
+        fwd = d.forward(0, exec_estimate=2.0, after=(gen,))
+        upd = d.update_actor(0, exec_estimate=2.0, after=(fwd,))
+        syn = d.sync_weights(d, exec_estimate=1.0, after=(upd,))
+        track(gen, fwd, upd, syn)
+        director.on_job_step("jobB")
+
+    add("jobA")
+    add("jobB")
+    for step in range(6):
+        if step < 2:
+            step_a(6.0, 2.0)
+        else:
+            step_a(12.0, 3.5)           # rollout DOUBLES mid-run
+        step_b()
+        clock.advance(0.25)
+    events = [dict(e) for e in director.events]
+    states = {j: (director.job_state(j).phase, director.job_state(j).group_id,
+                  director.job_state(j).trace.period)
+              for j in ("jobA", "jobB")}
+    order = [ordinal[t.request.req_id]
+             for t in sorted(router.executor.tasks.values(),
+                             key=lambda t: t.t_started)
+             if t.request.req_id in ordinal]
+    exec_logs = {d: [tuple(x) for x in router.wpgs[d].exec_log]
+                 for d in sorted(router.wpgs)}
+    plan = director.cluster_plan()
+    return events, states, order, exec_logs, plan
+
+
+def test_drift_detect_reprofile_refit_migrate():
+    events, states, _, exec_logs, plan = _drift_flow()
+    kinds = [e["event"] for e in events]
+    # the doubled rollout is DETECTED against the placed trace
+    drifts = [e for e in events if e["event"] == "drift"]
+    assert len(drifts) == 1 and drifts[0]["job"] == "jobA"
+    assert drifts[0]["old_period"] == 8.0
+    assert drifts[0]["new_period"] == 15.5
+    assert drifts[0]["ratio"] == pytest.approx(15.5 / 8.0)
+    # RE-PROFILED + re-fitted: the drift warm_place carries the new period
+    refits = [e for e in events if e["event"] == "warm_place"
+              and e.get("reason") == "drift"]
+    assert len(refits) == 1 and refits[0]["period"] == 15.5
+    # the grown trace cannot coexist with jobB -> a group is spawned for
+    # it and the job is LIVE-MIGRATED off the shared group
+    drift_i = events.index(drifts[0])
+    later = [e["event"] for e in events[drift_i:]]
+    assert "spawn_group" in later and "migrate" in later
+    migrates = [e for e in events[drift_i:] if e["event"] == "migrate"]
+    assert any(m["job"] == "jobA" for m in migrates)
+    # final state: jobA warm on its own group with the re-profiled trace
+    assert states["jobA"][0] == "warm" and states["jobA"][2] == 15.5
+    assert states["jobA"][1] != states["jobB"][1]
+    assert plan.assignment("jobA").group_id == states["jobA"][1]
+    # billing source of truth conserved bit-for-bit across the migrations:
+    # every executed op survives in exactly one exec log with exact costs
+    all_ops = [op for log in exec_logs.values() for op in log]
+    assert sorted(all_ops) == sorted(
+        [("generate", 6.0), ("update_actor", 2.0)] * 2
+        + [("generate", 12.0), ("update_actor", 3.5)] * 4
+        + [("generate", 1.0), ("forward", 2.0), ("update_actor", 2.0),
+           ("sync_weights", 1.0)] * 6)
+    # the consolidation-era events are still the PR-4 contract
+    assert kinds.count("cold_place") == 2
+    assert "retire_group" in kinds
+
+
+def test_drift_flow_bit_identical_replay():
+    assert _drift_flow() == _drift_flow(), \
+        "reconciliation replay diverged between runs"
+
+
+# --------------------------------- acceptance: 3-group pressure scenario
+def test_pressure_scenario_consolidates_and_spreads():
+    """Scripted 3-group scenario: a forced reconcile pass plans a BATCHED
+    repack that consolidates two compatible warm jobs onto one group (the
+    vacated group is retired), then queue pressure on the packed group
+    sheds its worst-interfering job onto a freshly spawned spare — every
+    step visible in ``director.events``."""
+    clock, router = _virtual_router()
+    director = PlacementDirector(
+        router, DirectorConfig(horizon=400.0, min_groups=1,
+                               spawn_queue_depth=4, warmup_cycles=0,
+                               repack_interval_s=1e9),
+        initial_groups=[0, 1, 2])
+    depA = router.deploy(_spec("jobA"), group_id=0)
+    depB = router.deploy(_spec("jobB", "jobB-train"), group_id=1)
+    for g, dep in ((0, depA), (1, depB)):
+        sm = router.state_managers[g]
+        wpg = router.wpgs[dep.spec.deployment_id]
+        sm.register(wpg.job_prefix, {"w": np.ones((8, 8), np.float32)})
+    # warm handoff: two phase-compatible period-8 jobs parked APART (the
+    # scripted drifted state a one-shot placer would never revisit)
+    director.adopt_warm("jobA", JobTrace(8.0, ((6.0, 2.0),)), 0)
+    director.adopt_warm("jobB", JobTrace(8.0, ((1.0, 3.0),)), 1)
+    assert len(director.policy.groups) == 3
+
+    # --- consolidation: the reconcile pass plans + realizes a batched
+    # repack; jobB joins jobA (pack-first tie-break), g1 and the idle g2
+    # are retired
+    moves = director.reconcile_now(force=True)
+    assert len(moves) == 1 and moves[0].job_id == "jobB"
+    assert moves[0].vacates
+    events = director.events
+    kinds = [e["event"] for e in events]
+    assert "repack" in kinds
+    repack = next(e for e in events if e["event"] == "repack")
+    assert [(m[0], m[1], m[2]) for m in repack["moves"]] == [("jobB", 1, 0)]
+    assert any(e["event"] == "migrate" and e["job"] == "jobB"
+               and e["src"] == 1 and e["dst"] == 0 for e in events)
+    assert kinds.count("retire_group") == 2          # g1 (vacated) + g2 (idle)
+    assert router.group_of["jobB-train"] == 0
+    assert [g.group_id for g in director.policy.groups] == [0]
+
+    # --- spreading: queue pressure on the packed group sheds the worst-
+    # interfering job onto a spawned spare
+    queued = [depB.forward(i, exec_estimate=1.0) for i in range(5)]
+    director.poll()
+    kinds = [e["event"] for e in director.events]
+    shed = next(e for e in director.events if e["event"] == "shed")
+    assert shed["src"] == 0 and shed["queue_depth"] == 5
+    spawn = next(e for e in director.events
+                 if e["event"] == "spawn_group"
+                 and e["reason"].startswith("shed:"))
+    assert shed["dst"] == spawn["group"]
+    assert any(e["event"] == "migrate" and e["job"] == shed["job"]
+               for e in director.events)
+    ja, jb = director.job_state("jobA"), director.job_state("jobB")
+    assert {ja.group_id, jb.group_id} == {0, spawn["group"]}
+    # the plane still drains and the plan matches reality
+    router.drain()
+    for f in queued:
+        assert f.result()["req_id"] > 0
+    plan = director.cluster_plan()
+    assert plan.assignment("jobA").group_id == ja.group_id
+    assert plan.assignment("jobB").group_id == jb.group_id
+
+
+def test_adopt_warm_releases_previous_reservation():
+    """Regression (review): adopting a warm placement for a job that was
+    already cold-assigned must not leave a ghost reservation on the old
+    group (which would block its retirement forever)."""
+    clock, router = _virtual_router()
+    director = PlacementDirector(router, DirectorConfig(horizon=200.0),
+                                 initial_groups=[0, 1])
+    gid = director.assign("jobA")
+    assert gid == 0
+    director.adopt_warm("jobA", JobTrace(8.0, ((6.0, 2.0),)), 1)
+    g0 = director.policy.group(0)
+    assert g0.resident == []               # old cold reservation released
+    assert director.policy.placed["jobA"].group_id == 1
+    assert director.job_state("jobA").phase == "warm"
+
+
+# ------------------------------------------------- migration rollback
+def test_failed_migration_rolls_back_placement():
+    """A promotion migration that fails (e.g. quiesce timeout) must leave
+    the job placed — and running — on its source group."""
+    clock, router = _virtual_router()
+    director = PlacementDirector(
+        router, DirectorConfig(horizon=300.0, cold_reserve_s=40.0,
+                               warmup_cycles=0, min_groups=1),
+        initial_groups=[0])
+    deps = {}
+
+    def add(job):
+        gid = director.assign(job)
+        deps[job] = router.deploy(_spec(job, f"{job}-train"), group_id=gid)
+
+    def run_step(job, rollout, update):
+        tails = _grpo_cycle(deps[job], rollout=rollout, update=update)
+        router.drain()
+        for f in tails:
+            f.result()
+        director.on_job_step(job)
+
+    add("jobA")
+    add("jobB")
+
+    def boom(moves, timeout=120.0):
+        return [(m, 0, RuntimeError("quiesce timeout")) for m in moves]
+
+    router.reassign_jobs = boom
+    for _ in range(2):
+        run_step("jobA", 6.0, 2.0)
+        run_step("jobB", 5.0, 3.0)
+    failed = [e for e in director.events if e["event"] == "migrate_failed"]
+    assert failed, director.events
+    job = failed[0]["job"]
+    js = director.job_state(job)
+    assert js.phase == "warm"
+    assert js.group_id == failed[0]["src"]
+    assert director.policy.placed[job].group_id == failed[0]["src"]
+    # the job keeps making progress on its source group
+    run_step(job, 6.0, 2.0)
+    assert director.job_state(job).phase == "warm"

@@ -1,0 +1,139 @@
+"""Property tests for the repack planner (ISSUE 5 satellite): after ANY
+randomized add / remove / advance / repack sequence,
+
+- every surviving job retains exactly ONE reservation (one ``Placed`` in
+  ``policy.placed``, listed once in exactly one group's resident list,
+  group ids consistent), and
+- no group's reserved windows double-book: the feasibility-checked
+  cycle-0 anatomy of any two residents of a group never overlaps, and a
+  resident's cycle-0 windows are never simultaneously marked free.
+
+(Only the aligned first cycle is feasibility-checked by design — later
+cycles of differently-periodic jobs are blind-subtracted so the window
+ends up busy either way; the predicted cost of that approximation is what
+``phase_interference`` scores. The invariants here are exactly the ones
+``place_warm`` / ``remove`` / ``plan_repack`` / ``apply_repack`` promise.)
+"""
+import itertools
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.scheduler.intervals import IntervalSet
+from repro.core.scheduler.placement import (JobTrace, NodeGroup,
+                                            PlacementConfig, PlacementPolicy)
+
+HORIZON = 400.0
+EPS = 1e-9
+
+
+def _random_trace(data) -> JobTrace:
+    period = data.draw(st.floats(6.0, 24.0))
+    rollout = period * data.draw(st.floats(0.3, 0.7))
+    budget = period - rollout
+    n_segs = data.draw(st.integers(1, 2))
+    segs, t = [], rollout
+    for i in range(n_segs):
+        d = budget / n_segs * data.draw(st.floats(0.4, 1.0))
+        segs.append((t, d))
+        t += d
+    return JobTrace(period=period, segments=tuple(segs))
+
+
+def _cycle0_windows(p):
+    return [(p.origin + p.shift + a, p.origin + p.shift + a + d)
+            for a, d in p.trace.segments]
+
+
+def _check_invariants(pol: PlacementPolicy, alive):
+    assert sorted(pol.placed) == sorted(alive)
+    seen = {}
+    for g in pol.groups:
+        for p in g.resident:
+            assert p.job_id not in seen, \
+                f"{p.job_id} holds reservations on {seen[p.job_id]} AND " \
+                f"{g.group_id}"
+            seen[p.job_id] = g.group_id
+            assert pol.placed.get(p.job_id) is p
+            assert p.group_id == g.group_id
+    assert set(seen) == set(pol.placed), "orphaned reservation"
+    for g in pol.groups:
+        booked = []
+        for p in sorted(g.resident, key=lambda p: p.job_id):
+            for s, e in _cycle0_windows(p):
+                for s2, e2, other in booked:
+                    assert min(e, e2) - max(s, s2) <= EPS, \
+                        f"group {g.group_id}: {p.job_id} cycle-0 window " \
+                        f"[{s}, {e}) double-books {other}'s [{s2}, {e2})"
+                # a reserved window must not simultaneously be free
+                for fs, fe in g.free.intervals():
+                    assert min(e, fe) - max(s, fs) <= EPS, \
+                        f"group {g.group_id}: reserved [{s}, {e}) of " \
+                        f"{p.job_id} overlaps free [{fs}, {fe})"
+                booked.append((s, e, p.job_id))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_repack_sequences_never_double_book(data):
+    n_groups = data.draw(st.integers(2, 4))
+    pol = PlacementPolicy(
+        [NodeGroup(g, 1, IntervalSet([(0.0, HORIZON)]))
+         for g in range(n_groups)],
+        PlacementConfig(horizon=HORIZON))
+    counter = itertools.count()
+    alive = []
+    now = 0.0
+    for _ in range(data.draw(st.integers(6, 24))):
+        op = data.draw(st.sampled_from(
+            ["add", "add", "add", "cold", "remove", "repack", "advance"]))
+        if op == "add":
+            job = f"j{next(counter)}"
+            if pol.place_warm(job, _random_trace(data),
+                              origin=now) is not None:
+                alive.append(job)
+        elif op == "cold":
+            job = f"c{next(counter)}"
+            dur = data.draw(st.floats(10.0, 60.0))
+            if pol.place_cold(job, 1, dur, origin=now) is not None:
+                alive.append(job)
+        elif op == "remove" and alive:
+            job = alive.pop(data.draw(st.integers(0, len(alive) - 1)))
+            pol.remove(job)
+        elif op == "repack":
+            min_gain = data.draw(st.sampled_from([0.0, 0.001,
+                                                  float("inf")]))
+            pol.repack(origin=now, min_gain=min_gain)
+        elif op == "advance":
+            now += data.draw(st.floats(0.0, 30.0))
+            for g in pol.groups:
+                g.advance_to(now)
+                g.extend_to(now + HORIZON)
+        _check_invariants(pol, alive)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_plan_repack_never_mutates_live_state(data):
+    """plan_repack must be a pure function of the state: planning twice is
+    idempotent and leaves every reservation and free window untouched."""
+    pol = PlacementPolicy(
+        [NodeGroup(g, 1, IntervalSet([(0.0, HORIZON)])) for g in range(3)],
+        PlacementConfig(horizon=HORIZON))
+    for i in range(data.draw(st.integers(1, 6))):
+        pol.place_warm(f"j{i}", _random_trace(data), origin=0.0)
+    snap_placed = {j: (p.group_id, p.shift, p.origin)
+                   for j, p in pol.placed.items()}
+    snap_free = {g.group_id: g.free.intervals() for g in pol.groups}
+    plan1 = pol.plan_repack(origin=0.0)
+    plan2 = pol.plan_repack(origin=0.0)
+    assert {j: (p.group_id, p.shift, p.origin)
+            for j, p in pol.placed.items()} == snap_placed
+    assert {g.group_id: g.free.intervals()
+            for g in pol.groups} == snap_free
+    assert [(m.job_id, m.src_group, m.dst_group, m.shift)
+            for m in plan1.moves] == \
+        [(m.job_id, m.src_group, m.dst_group, m.shift)
+         for m in plan2.moves]
