@@ -1,0 +1,94 @@
+"""Cross-mesh migration cost (reshard included) at 2/4/8 devices per group.
+
+The parent process's jax backend is already pinned to the default single
+CPU device, so each measurement runs in a CHILD process launched with
+``XLA_FLAGS=--xla_force_host_platform_device_count=2*dpg`` (the flag must
+be set before jax initialises — same trick as launch/dryrun.py and the CI
+multi-device matrix leg). The child carves two disjoint ``dpg``-device
+slices, registers ~8 MiB of model-sharded state on the source slice, and
+times ``StateManager.migrate`` onto the destination slice: device_get off
+the source mesh, device_put with the target slice's NamedShardings.
+
+Rows complement ``placement/repack_migrate_s`` (hrrs_bench), which times a
+same-mesh move through the full reassign_job path; these isolate the
+cross-mesh reshard the PlacementDirector charges via its measured
+``cross_min_gain`` floor.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+NBYTES = 8 << 20
+DEVICES_PER_GROUP = (2, 4, 8)
+
+
+def _child(dpg: int) -> None:
+    import jax  # noqa: F401  (backend initialises under the forced flag)
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.state_manager import StateManager, Tier
+    from repro.launch.mesh import DevicePlane
+
+    plane = DevicePlane(slice_size=dpg)
+    src = StateManager(node_id="src", mesh_slice=plane.slice_for_group(0))
+    dst = StateManager(node_id="dst", mesh_slice=plane.slice_for_group(1))
+    assert src.mesh_slice.devices != dst.mesh_slice.devices
+    n_arrays = 8
+    cols = dpg * 64
+    rows_ = NBYTES // n_arrays // 4 // cols
+    mesh = src.mesh_slice.mesh
+    tree = {
+        f"w{i}": jax.device_put(
+            np.random.RandomState(i).rand(rows_, cols).astype(np.float32),
+            NamedSharding(mesh, P(None, "model")))
+        for i in range(n_arrays)}
+    src.register("job:dep", tree, Tier.DEVICE, "params")
+    # one warm-up migration (first device_put pays compilation/layout setup)
+    src.migrate("job:dep", dst)
+    dst.migrate("job:dep", src)
+    t0 = time.perf_counter()
+    moved = src.migrate("job:dep", dst)
+    dt = time.perf_counter() - t0
+    assert src.last_migrate["cross_mesh"]
+    print(json.dumps({"dpg": dpg, "seconds": dt, "bytes": moved,
+                      "n_devices": len(jax.devices())}))
+
+
+def run() -> list:
+    rows = []
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for dpg in DEVICES_PER_GROUP:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={2 * dpg}")
+        env["JAX_PLATFORMS"] = "cpu"
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (os.path.join(root, "src"), root,
+                        env.get("PYTHONPATH")) if p)
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.mesh_bench",
+             "--child", str(dpg)],
+            env=env, cwd=root, capture_output=True, text=True, timeout=300)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"mesh_bench child dpg={dpg} failed: {proc.stderr[-2000:]}")
+        data = json.loads(proc.stdout.strip().splitlines()[-1])
+        rows.append((
+            f"placement/cross_mesh_migrate_s_d{dpg}",
+            round(data["seconds"], 6),
+            f"reshard-included migrate(8MiB) across disjoint {dpg}-device "
+            f"slices"))
+    return rows
+
+
+if __name__ == "__main__":
+    if len(sys.argv) >= 3 and sys.argv[1] == "--child":
+        _child(int(sys.argv[2]))
+    else:
+        for name, value, derived in run():
+            print(f"{name},{value},{derived}")

@@ -13,7 +13,7 @@ import json
 import sys
 import time
 
-BENCH_JSON = "BENCH_PR5.json"
+BENCH_JSON = "BENCH_PR6.json"
 
 
 def write_bench_json(rows: list, path: str) -> None:
@@ -38,6 +38,7 @@ def main() -> None:
     import benchmarks.fig8_policies as fig8
     import benchmarks.table2_bubble as table2
     import benchmarks.hrrs_bench as hrrsb
+    import benchmarks.mesh_bench as meshb
     import benchmarks.roofline as roofline
 
     ap = argparse.ArgumentParser()
@@ -52,6 +53,7 @@ def main() -> None:
         ("fig8_policies", fig8),
         ("table2_bubble", table2),
         ("hrrs_bench", hrrsb),
+        ("mesh_bench", meshb),
         ("roofline", roofline),
     ]
     print("name,value,derived")

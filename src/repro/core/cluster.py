@@ -27,7 +27,7 @@ from repro.core.control_plane import DirectorConfig, PlacementDirector
 from repro.core.controller import (JobConfig, RLControllerGRPO,
                                    RLControllerPPO, _RLControllerBase)
 from repro.core.router import Router
-from repro.core.state_manager import StateManager, Tier
+from repro.core.state_manager import Tier
 
 CONTROLLER_TYPES = {"grpo": RLControllerGRPO, "ppo": RLControllerPPO}
 
@@ -46,9 +46,11 @@ class BillingRecord:
 class PlexCluster:
     def __init__(self, n_groups: int = 1, policy: str = "hrrs",
                  wpg_factory=None,
-                 director_cfg: Optional[DirectorConfig] = None):
+                 director_cfg: Optional[DirectorConfig] = None,
+                 devices_per_group: Optional[int] = None):
         kwargs = {} if wpg_factory is None else {"wpg_factory": wpg_factory}
-        self.router = Router(policy=policy, **kwargs)
+        self.router = Router(policy=policy,
+                             devices_per_group=devices_per_group, **kwargs)
         self.controllers: Dict[str, _RLControllerBase] = {}
         self.billing: Dict[str, BillingRecord] = {}
         # incremental billing cursors: exec-log offset per deployment and
@@ -66,8 +68,10 @@ class PlexCluster:
         self._removed_jobs: set = set()
         self.client_errors: Dict[str, BaseException] = {}
         for g in range(n_groups):
-            self.router.state_managers[g] = StateManager(
-                node_id=f"group{g}", clock=self.router.now)
+            # ensure_group leases each group its mesh slice from the
+            # router's device plane (disjoint hardware per group when the
+            # process has enough devices; shared lone slice otherwise)
+            self.router.ensure_group(g)
         # the live control plane: online profiler + automatic placement +
         # capacity adjustment over this router's node groups
         self.director = PlacementDirector(self.router, cfg=director_cfg,
@@ -317,8 +321,13 @@ class PlexCluster:
             if rec is None:
                 continue
             start = self._billed_ops.get(dep_id, 0)
-            new = wpg.exec_log[start:]
-            self._billed_ops[dep_id] = start + len(new)
+            log = wpg.exec_log
+            if hasattr(log, "since"):      # bounded ring: absolute cursors
+                new, cursor = log.since(start)
+            else:                          # plain list (test/bench stubs)
+                new = log[start:]
+                cursor = start + len(new)
+            self._billed_ops[dep_id] = cursor
             rec.busy_seconds += sum(dt for _, dt in new)
         for ev in self.router.switch_log[self._billed_switches:]:
             rec = self.billing.get(ev["to_job"])

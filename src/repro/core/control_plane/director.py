@@ -90,6 +90,14 @@ class PlacementDirector:
         # concurrent migration of the same job would drop the first one's
         # admission hold mid-copy)
         self._migrating: set = set()
+        # measured migration-cost floors (EWMA of realized costs from
+        # Router.migrate_log), keyed by cross_mesh; None = not yet measured
+        # (fall back to the configured floors). VirtualClock runs record
+        # zero-duration migrations, which are discarded — replay stays
+        # bit-identical to the configured-floor decisions.
+        self._measured_floor: Dict[bool, Optional[float]] = {
+            False: None, True: None}
+        self._migrate_cursor = 0
         self.events: List[dict] = []
         self._plan: Optional[ClusterPlan] = None
         self._plan_version = 0
@@ -364,8 +372,13 @@ class PlacementDirector:
                     if g.group_id not in cold]
         if not eligible:
             return []
+        mesh_of = (self.router.mesh_domains()
+                   if hasattr(self.router, "mesh_domains") else None)
         res = self.reconciler.check(now, self.router.executor, eligible,
-                                    force=force)
+                                    force=force,
+                                    min_gain=self.migration_floor(False),
+                                    cross_min_gain=self.migration_floor(True),
+                                    mesh_of=mesh_of)
         if res is None:
             return []
         plan, drifted = res
@@ -429,6 +442,42 @@ class PlacementDirector:
                 self._log("job_removed", job=job_id, t=now)
             self._retire_idle(now)
 
+    # -------------------------------------------- measured migration floor
+    def migration_floor(self, cross_mesh: bool = False) -> float:
+        """The migration-cost floor the planner should charge a move:
+        the MEASURED realized cost (EWMA over Router.migrate_log) once any
+        migration of that kind has run, else the configured floor
+        (``cross_mesh_floor_s`` falls back to the same-mesh measurement,
+        then to ``migration_floor_s``)."""
+        m = self._measured_floor[cross_mesh]
+        if m is not None:
+            return m
+        if cross_mesh:
+            if self.cfg.cross_mesh_floor_s is not None:
+                return self.cfg.cross_mesh_floor_s
+            if self._measured_floor[False] is not None:
+                return self._measured_floor[False]
+        return self.cfg.migration_floor_s
+
+    def _ingest_migration_costs(self):
+        """Fold newly realized migrations (reshard time included) into the
+        per-kind floor EWMAs. Zero-duration records (VirtualClock replays,
+        where transfers take no virtual time) are discarded so replayed
+        decision sequences stay bit-identical. Call under ``_lock``."""
+        log = getattr(self.router, "migrate_log", None)
+        if log is None:
+            return
+        new = log[self._migrate_cursor:]
+        self._migrate_cursor = len(log)
+        for ev in new:
+            dt = ev.get("seconds", 0.0)
+            if dt <= 0.0:
+                continue
+            kind = bool(ev.get("cross_mesh"))
+            old = self._measured_floor[kind]
+            self._measured_floor[kind] = (dt if old is None
+                                          else 0.7 * old + 0.3 * dt)
+
     # ---------------------------------------------------------- realization
     def _realize(self, moves: List[JobMove]):
         """Realize a batch of decided moves through the router (batched
@@ -459,6 +508,9 @@ class PlacementDirector:
             results = self.router.reassign_jobs(todo)
             with self._lock:
                 now = self.router.now()
+                # calibrate the migration floors from the realized
+                # (reshard-included) costs these moves just measured
+                self._ingest_migration_costs()
                 for m, moved, err in results:
                     if err is None:
                         self._log("migrate", job=m.job_id, src=m.src_group,

@@ -63,6 +63,10 @@ class DirectorConfig:
     migration_floor_s: float = 0.001  # predicted-gain floor under which a
     #   repack move is skipped (fed from the measured
     #   placement/repack_migrate_s benchmark: ~1 ms per realized migration)
+    cross_mesh_floor_s: Optional[float] = None  # floor for moves that cross
+    #   mesh-slice domains (the reshard-included cost); None = start at
+    #   migration_floor_s until the director has measured real cross-mesh
+    #   migrations from Router.migrate_log
 
 
 def trace_from_cycles(cycles: Sequence[Dict[str, float]],

@@ -89,20 +89,32 @@ class Reconciler:
 
     def check(self, now: float, executor,
               eligible: Optional[Sequence[int]] = None,
-              force: bool = False
+              force: bool = False,
+              min_gain: Optional[float] = None,
+              cross_min_gain: Optional[float] = None,
+              mesh_of: Optional[Dict[int, int]] = None
               ) -> Optional[Tuple[RepackPlan, List[dict]]]:
         """The periodic reconcile pass: when due (or forced), measure
         occupancy drift and — if any group diverged — plan an incremental
         repack against the live absolute-time windows. Returns
-        ``(plan, drifted_groups)`` or None when nothing is due/diverged."""
+        ``(plan, drifted_groups)`` or None when nothing is due/diverged.
+
+        ``min_gain`` / ``cross_min_gain`` override the configured
+        migration-cost floor with the director's MEASURED same-mesh /
+        cross-mesh migration costs; ``mesh_of`` maps group ids to
+        mesh-slice domains so the planner knows which moves pay the
+        cross-mesh reshard."""
         if not force and not self.due(now):
             return None
         self._last_repack_t = now
         drifted = self.occupancy_drift(executor)
         if not drifted and not force:
             return None
-        plan = self.policy.plan_repack(origin=now, groups=eligible,
-                                       min_gain=self.cfg.migration_floor_s)
+        plan = self.policy.plan_repack(
+            origin=now, groups=eligible,
+            min_gain=self.cfg.migration_floor_s if min_gain is None
+            else min_gain,
+            cross_min_gain=cross_min_gain, mesh_of=mesh_of)
         return plan, drifted
 
     # --------------------------------------------- trigger 2: phase drift

@@ -51,6 +51,7 @@ from repro.core.scheduler import hrrs
 from repro.core.scheduler.executor import State, Task, TaskExecutor
 from repro.core.state_manager import StateManager, Tier
 from repro.core.worker import WorkerProcessGroup
+from repro.launch.mesh import DevicePlane
 
 logger = logging.getLogger(__name__)
 
@@ -58,12 +59,21 @@ logger = logging.getLogger(__name__)
 class Router:
     def __init__(self, now: Callable[[], float] = time.monotonic,
                  policy: str = "hrrs",
-                 wpg_factory: Callable[..., object] = WorkerProcessGroup):
+                 wpg_factory: Callable[..., object] = WorkerProcessGroup,
+                 device_plane: Optional[DevicePlane] = None,
+                 devices_per_group: Optional[int] = None):
         self.now = now
         self.wpgs: Dict[str, object] = {}
         self.deployments: Dict[str, api.DeploymentSpec] = {}
         self.group_of: Dict[str, int] = {}       # deployment -> node group
         self.state_managers: Dict[int, StateManager] = {}
+        # the device plane leases each group a disjoint mesh slice; on one
+        # default device every group shares the lone slice (legacy view)
+        self.device_plane = device_plane or DevicePlane(
+            slice_size=devices_per_group)
+        # realized migration costs (reshard included), consumed by the
+        # PlacementDirector to calibrate the migration-cost floor
+        self.migrate_log: List[dict] = []
         self.executor = TaskExecutor(now=now, policy=policy)
         # per-job queued-op table, keyed by req_id for O(1) finalize
         self.request_queues: Dict[str, Dict[int, api.QueuedOperation]] = {}
@@ -83,15 +93,34 @@ class Router:
         self._serve_err_start = 0
 
     # ----------------------------------------------------------- lifecycle
+    def _group_sm(self, group_id: int) -> StateManager:
+        """The group's StateManager, creating it (and leasing the group's
+        mesh slice from the device plane) on first sight. The slice lease
+        is what gives the group hardware affinity: every WPG on the group
+        reads ``sm.mesh_slice`` for its jit/sharding mesh."""
+        sm = self.state_managers.get(group_id)
+        if sm is None:
+            sm = StateManager(
+                node_id=f"group{group_id}", clock=self.now,
+                mesh_slice=self.device_plane.slice_for_group(group_id))
+            self.state_managers[group_id] = sm
+        elif sm.mesh_slice is None:
+            sm.mesh_slice = self.device_plane.slice_for_group(group_id)
+        return sm
+
+    def mesh_domains(self) -> Dict[int, int]:
+        """group id -> mesh-slice index (the placement layer's domain map:
+        a move between different domains pays the cross-mesh reshard)."""
+        return self.device_plane.domains()
+
     def create_deployment(self, spec: api.DeploymentSpec, group_id: int = 0,
                           state_manager: Optional[StateManager] = None):
         """Register a deployment (low level; returns the WPG). While serving,
         a deployment on a group without a dispatch worker spawns one, so
         jobs attach to a live plane without a restart."""
-        sm = state_manager or self.state_managers.setdefault(
-            group_id, StateManager(node_id=f"group{group_id}",
-                                   clock=self.now))
-        self.state_managers[group_id] = sm
+        with self.executor.cv:
+            sm = state_manager or self._group_sm(group_id)
+            self.state_managers[group_id] = sm
         wpg = self.wpg_factory(spec, sm)
         with self.executor.cv:
             self.wpgs[spec.deployment_id] = wpg
@@ -527,9 +556,7 @@ class Router:
         a dispatch worker is spawned so deployments placed on it are admitted
         the moment they arrive."""
         with self.executor.cv:
-            sm = self.state_managers.setdefault(
-                group_id, StateManager(node_id=f"group{group_id}",
-                                       clock=self.now))
+            sm = self._group_sm(group_id)
             serving = self._serving
         if serving:
             self._ensure_serve_worker(group_id)
@@ -577,6 +604,8 @@ class Router:
                 sm = self.state_managers.get(group_id)
                 if sm is not None and not sm.entries:
                     del self.state_managers[group_id]
+                    # return the group's mesh-slice lease to the plane
+                    self.device_plane.release(group_id)
 
     def group_telemetry(self) -> Dict[int, dict]:
         """Per-group queue-depth / occupancy snapshot (the §4.4 capacity
@@ -610,23 +639,36 @@ class Router:
         safe because the held job's entries are not unregistered by anyone
         (a concurrent switch may at worst offload them tier-wise, and
         ``StateManager.migrate`` reads either tier consistently); only the
-        map swaps (wpg.sm, group_of, resident flag) take the lock."""
+        map swaps (wpg.sm, group_of, resident flag) take the lock.
+
+        The realized cost (reshard included, measured via ``self.now``) is
+        appended to :attr:`migrate_log`, which the PlacementDirector drains
+        to calibrate its migration-cost floors (same-mesh vs cross-mesh)."""
         with self.executor.cv:
             src = self.state_managers[src_group]
-            dst = self.state_managers.setdefault(
-                dst_group, StateManager(node_id=f"group{dst_group}",
-                                        clock=self.now))
+            dst = self._group_sm(dst_group)
             targets = [(d, w) for d, w in self.wpgs.items()
                        if w.spec.job_id == job_id]
+        t0 = self.now()
         moved = 0
+        cross = False
         for _, wpg in targets:
             moved += src.migrate(wpg.job_prefix, dst)
+            if src.last_migrate is not None:
+                cross = cross or bool(src.last_migrate.get("cross_mesh"))
+        dt = self.now() - t0
         with self.executor.cv:
             for dep_id, wpg in targets:
                 wpg.sm = dst
                 self.group_of[dep_id] = dst_group
             if self.executor.resident_job.get(src_group) == job_id:
                 self.executor.resident_job[src_group] = None
+            self.migrate_log.append({
+                "job": job_id, "src": src_group, "dst": dst_group,
+                "bytes": moved, "seconds": dt, "cross_mesh": cross,
+                "t": self.now()})
+            if len(self.migrate_log) > 1024:
+                del self.migrate_log[:len(self.migrate_log) - 1024]
         return moved
 
     def reassign_job(self, job_id: str, dst_group: int,

@@ -459,18 +459,27 @@ class PlacementPolicy:
     # ----------------------------------------------------------- repack
     def plan_repack(self, origin: float = 0.0,
                     groups: Optional[Sequence[int]] = None,
-                    min_gain: float = 0.0) -> RepackPlan:
+                    min_gain: float = 0.0,
+                    cross_min_gain: Optional[float] = None,
+                    mesh_of: Optional[Dict[int, int]] = None) -> RepackPlan:
         """Plan a repacking event (§4.3.2) WITHOUT mutating the live state.
 
         Jobs are re-fitted one at a time on a clone, by descending duty
         ratio, against live absolute-time windows (``origin`` = now). The
         result is an ordered migration plan: group-changing moves carry
         their predicted interference delta, and a move whose gain is below
-        ``min_gain`` (the migration-cost floor, fed from the measured
-        ``placement/repack_migrate_s`` bench) is skipped — unless it vacates
-        its source group, since retiring a whole group always beats a
+        the migration-cost floor is skipped — unless it vacates its source
+        group, since retiring a whole group always beats a
         millisecond-scale migration. One-shot cold reservations are pinned
-        and never repacked."""
+        and never repacked.
+
+        The floor is mesh-domain-aware: ``min_gain`` applies to moves
+        within one mesh domain (fed from the measured
+        ``placement/repack_migrate_s`` bench), while a move that crosses
+        domains in ``mesh_of`` (group id -> mesh-slice index) must clear
+        ``cross_min_gain`` — the realized cross-mesh reshard cost the
+        director measures from ``Router.migrate_log``. Unknown groups are
+        treated as crossing (the conservative floor)."""
         clone = self.clone()
         for g in clone.groups:
             g.advance_to(origin)
@@ -506,7 +515,13 @@ class PlacementPolicy:
                            origin=origin, gain=before - after,
                            vacates=was_last, src_shift=old.shift,
                            src_origin=old.origin, n_cycles=p.n_cycles)
-            if not move.vacates and move.gain < min_gain:
+            floor = min_gain
+            if cross_min_gain is not None and mesh_of is not None:
+                src_dom = mesh_of.get(old.group_id)
+                dst_dom = mesh_of.get(p.group_id)
+                if src_dom is None or dst_dom is None or src_dom != dst_dom:
+                    floor = max(floor, cross_min_gain)
+            if not move.vacates and move.gain < floor:
                 clone.remove(job_id)
                 clone.place_at(job_id, old.trace, old.group_id, old.shift,
                                origin=old.origin, n_cycles=old.n_cycles)
@@ -530,11 +545,15 @@ class PlacementPolicy:
 
     def repack(self, origin: float = 0.0,
                groups: Optional[Sequence[int]] = None,
-               min_gain: float = 0.0) -> int:
+               min_gain: float = 0.0,
+               cross_min_gain: Optional[float] = None,
+               mesh_of: Optional[Dict[int, int]] = None) -> int:
         """Repacking event (§4.3.2), plan-then-apply: re-fit all placed jobs
         by descending duty ratio. Returns the number of jobs whose
         assignment changed (moved groups or re-anchored)."""
         plan = self.plan_repack(origin=origin, groups=groups,
-                                min_gain=min_gain)
+                                min_gain=min_gain,
+                                cross_min_gain=cross_min_gain,
+                                mesh_of=mesh_of)
         self.apply_repack(plan)
         return len(plan.moves) + len(plan.reshifts)

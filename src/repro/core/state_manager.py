@@ -32,6 +32,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.models import common
 
@@ -53,6 +54,9 @@ class Entry:
     refcount: int = 1                # dedup count across logical replicas
     last_touch: float = 0.0
     is_bf16: bool = False            # DISK tier stores bf16 as uint16 views
+    spec: Any = None                 # PartitionSpec the DEVICE copy had, so
+    #   prefetch/migrate can rebuild the layout on THIS node's mesh slice
+    #   (or reshard onto a different slice's mesh — §4.5.3)
 
 
 def _nbytes(x) -> int:
@@ -66,15 +70,20 @@ class StateManager:
                  device_capacity: float = float("inf"),
                  host_capacity: float = float("inf"),
                  disk_dir: Optional[str] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 mesh_slice=None):
         self.node_id = node_id
         self.device_capacity = device_capacity
         self.host_capacity = host_capacity
         self.disk_dir = disk_dir or os.path.join("/tmp", f"plexrl_{node_id}")
         self.clock = clock
+        # the node group's MeshSlice (launch/mesh.py): DEVICE-tier entries
+        # live on these devices; None = wherever jax defaults (legacy view)
+        self.mesh_slice = mesh_slice
         self.entries: Dict[str, Entry] = {}
         self.transfer_log: List[Tuple[str, str, int, float]] = []
         self._bw_estimate: Dict[str, float] = {}   # bytes/s per direction
+        self.last_migrate: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------ helpers
     def _tier_bytes(self, tier: Tier) -> int:
@@ -94,6 +103,30 @@ class StateManager:
         bw = self._bw_estimate.get(direction, default_bw)
         return nbytes / max(bw, 1.0)
 
+    @staticmethod
+    def _leaf_spec(leaf):
+        """The PartitionSpec of a device-resident jax array (None for host
+        numpy / unsharded arrays)."""
+        shd = getattr(leaf, "sharding", None)
+        return shd.spec if isinstance(shd, NamedSharding) else None
+
+    def _to_device(self, arr, spec=None):
+        """Place a host array onto THIS node's mesh slice, restoring
+        ``spec`` when it still fits the slice's mesh; falls back to a
+        replicated put on the slice (or the default device with no slice)."""
+        if self.mesh_slice is not None:
+            if spec is not None:
+                try:
+                    return jax.device_put(
+                        arr, NamedSharding(self.mesh_slice.mesh, spec))
+                except Exception:  # noqa: BLE001 - spec may not divide here
+                    pass
+            # replicate across the slice: compatible under jit with leaves
+            # that DID reshard onto the slice's mesh
+            return jax.device_put(
+                arr, NamedSharding(self.mesh_slice.mesh, PartitionSpec()))
+        return jnp.asarray(arr)
+
     # ----------------------------------------------------------- register
     def register(self, job_id: str, tree, tier: Tier = Tier.DEVICE,
                  prefix: str = "params") -> List[str]:
@@ -109,7 +142,8 @@ class StateManager:
             else:
                 self.entries[key] = Entry(
                     key=key, tier=tier, nbytes=_nbytes(leaf),
-                    ref=leaf, last_touch=self.clock())
+                    ref=leaf, last_touch=self.clock(),
+                    spec=self._leaf_spec(leaf))
             keys.append(key)
         self._evict_if_needed()
         return keys
@@ -185,7 +219,14 @@ class StateManager:
             if shardings is not None:
                 shd = shardings[i] if isinstance(shardings, (list, tuple)) \
                     else shardings.get(k)
-            e.ref = jax.device_put(arr, shd) if shd is not None else jnp.asarray(arr)
+            if shd is not None:
+                e.ref = jax.device_put(arr, shd)
+                e.spec = shd.spec if isinstance(shd, NamedSharding) else e.spec
+            else:
+                # no explicit target layout: restore the entry's recorded
+                # spec on THIS node's mesh slice (device-aware residency)
+                e.ref = self._to_device(arr, e.spec)
+                e.spec = self._leaf_spec(e.ref)
             e.tier = Tier.DEVICE
             e.last_touch = self.clock()
             moved += e.nbytes
@@ -262,24 +303,61 @@ class StateManager:
         return tree
 
     def migrate(self, job_id: str, dst: "StateManager") -> int:
-        """Cross-node deployment migration: mirror managed state to the
-        destination node's manager (host tier) and drop it here."""
+        """Cross-node deployment migration (§4.5.3): mirror managed state to
+        the destination node's manager and drop it here.
+
+        Cross-mesh resharding: a DEVICE-tier entry is gathered off THIS
+        node's slice (device_get) and re-laid-out on the destination
+        slice's mesh with its recorded PartitionSpec (device_put with the
+        target NamedSharding); a destination without a mesh slice receives
+        host-tier copies (the legacy path). Transactional: nothing is
+        unregistered here until EVERY entry has landed on ``dst`` — a
+        mid-copy failure rolls the destination back and leaves this node's
+        state (all tiers, including disk files) untouched. Timed through
+        the injected clock, so the realized reshard cost feeds the
+        control plane's migration floor without breaking VirtualClock
+        replay (virtual transfers take zero time and are discarded)."""
+        t0 = self.clock()
+        keys = list(self.keys_for(job_id))
+        cross_mesh = (dst.mesh_slice is not None
+                      and (self.mesh_slice is None
+                           or dst.mesh_slice.devices != self.mesh_slice.devices))
+        staged: List[str] = []
         moved = 0
-        for k in list(self.keys_for(job_id)):
-            e = self.entries[k]
-            if e.tier == Tier.DEVICE:
-                arr = np.asarray(jax.device_get(e.ref))
-            elif e.tier == Tier.DISK:
-                arr = np.load(e.path)
-                if e.is_bf16:
-                    arr = arr.view(jnp.bfloat16)
-            else:
-                arr = e.ref
-            dst.entries[k] = Entry(key=k, tier=Tier.HOST, nbytes=e.nbytes,
-                                   ref=arr, version=e.version,
-                                   last_touch=dst.clock())
-            moved += e.nbytes
+        try:
+            for k in keys:
+                e = self.entries[k]
+                if e.tier == Tier.DEVICE:
+                    arr = np.asarray(jax.device_get(e.ref))
+                elif e.tier == Tier.DISK:
+                    arr = np.load(e.path)
+                    if e.is_bf16:
+                        arr = arr.view(jnp.bfloat16)
+                else:
+                    arr = e.ref
+                tier, ref, spec = Tier.HOST, arr, e.spec
+                if e.tier == Tier.DEVICE and dst.mesh_slice is not None:
+                    # reshard onto the target slice: the entry arrives
+                    # device-resident in the layout its spec dictates there
+                    ref = dst._to_device(arr, e.spec)
+                    tier = Tier.DEVICE
+                    spec = dst._leaf_spec(ref)
+                dst.entries[k] = Entry(key=k, tier=tier, nbytes=e.nbytes,
+                                       ref=ref, version=e.version,
+                                       last_touch=dst.clock(), spec=spec)
+                staged.append(k)
+                moved += e.nbytes
+        except Exception:
+            for k in staged:     # rollback: the source still owns the state
+                dst.entries.pop(k, None)
+            raise
+        for k in keys:
             self.unregister([k])
+        dst._evict_if_needed()
+        dt = self.clock() - t0
+        self._record("migrate", moved, dt)
+        self.last_migrate = {"bytes": moved, "seconds": dt,
+                             "cross_mesh": cross_mesh, "keys": len(keys)}
         return moved
 
     # ------------------------------------------- §4.5.4 host optimizer

@@ -6,14 +6,18 @@ WPGs may run concurrently when the Scheduler admits them. Parameters and
 optimizer state live under the node's StateManager as canonical entries, so
 context switching (offload/load) and weight sync never touch worker code.
 
-On this CPU container a WPG runs on the local device mesh; on a pod it would
-bind a mesh slice — the execution surface (jit + shardings) is identical.
+A WPG binds its node group's mesh slice (launch/mesh.py, read off the
+group's StateManager): parameters and optimizer state are laid out with the
+model's sharding rules against THAT mesh, so the jitted primitives are
+per-group — two groups holding disjoint slices execute on disjoint
+hardware, and migrating a WPG across groups reshards its state onto the
+destination slice.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,10 +25,55 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import api
 from repro.core.state_manager import StateManager, Tier
+from repro.models import sharding as shd
 from repro.models.registry import Model, build_model
 from repro.rl import grpo, ppo as ppo_lib, rollout as rollout_lib
-from repro.train import optimizer as opt
+from repro.train import optimizer as opt, train_state as tstate
 from repro.train.train_state import TrainState
+
+
+class ExecLog:
+    """Bounded execution log with ABSOLUTE offsets.
+
+    Billing consumes the log through incremental cursors; an unbounded list
+    leaks one tuple per op on a week-long serve plane (same failure shape
+    as the executor's settled-task table before ``max_settled_tasks``).
+    The ring drops the oldest entries past ``maxlen`` while ``offset``
+    tracks the absolute index of the first retained entry, so cursors keep
+    meaning "ops billed so far" across trims. ``len``/iteration/indexing
+    cover the RETAINED window (what observability consumers want);
+    :meth:`since` is the billing protocol."""
+
+    def __init__(self, maxlen: int = 4096):
+        self.maxlen = maxlen
+        self.offset = 0                      # absolute index of _items[0]
+        self._items: List[Tuple[str, float]] = []
+
+    def append(self, item):
+        self._items.append(item)
+        if len(self._items) > self.maxlen:
+            drop = len(self._items) - self.maxlen
+            del self._items[:drop]
+            self.offset += drop
+
+    def since(self, cursor: int) -> Tuple[List[Tuple[str, float]], int]:
+        """Entries at absolute index >= ``cursor`` (clamped to the retained
+        window) and the new cursor. Entries already trimmed are gone — the
+        ring must be sized above the billing cadence."""
+        start = max(int(cursor), self.offset)
+        return self._items[start - self.offset:], self.offset + len(self._items)
+
+    def total(self) -> int:
+        return self.offset + len(self._items)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __iter__(self):
+        return iter(self._items)
+
+    def __getitem__(self, i):
+        return self._items[i]
 
 
 def _value_readout(logits):
@@ -54,7 +103,10 @@ class WorkerProcessGroup:
         self._rng = jax.random.PRNGKey(rng_seed)
         self._initialized = False
         self._keys: Dict[str, list] = {}
-        self.exec_log: list = []
+        self.exec_log = ExecLog()
+        # per-WPG state shardings, cached per mesh slice (rebuilt after a
+        # cross-slice migration swaps self.sm)
+        self._shard_cache: Optional[tuple] = None
         # jitted primitives (built lazily)
         self._update_actor = None
         self._logprob = None
@@ -66,6 +118,31 @@ class WorkerProcessGroup:
     @property
     def job_prefix(self) -> str:
         return f"{self.spec.job_id}:{self.spec.deployment_id}"
+
+    # ---------------------------------------------------------- mesh slice
+    @property
+    def mesh_slice(self):
+        """The node group's MeshSlice, read off the group's StateManager so
+        a migration that swaps ``self.sm`` rebinds the WPG to the new
+        group's hardware automatically."""
+        return getattr(self.sm, "mesh_slice", None)
+
+    def state_shardings(self) -> Optional[TrainState]:
+        """NamedShardings for (params, opt_state, step) on THIS group's
+        mesh slice — per-WPG, not global. None without a slice (legacy
+        single-view execution). Cached per slice; jit re-specializes on
+        sharding change, so no explicit invalidation is needed."""
+        sl = self.mesh_slice
+        if sl is None:
+            return None
+        if self._shard_cache is None or self._shard_cache[0] is not sl.mesh:
+            self._shard_cache = (sl.mesh, tstate.shardings(
+                self.model, sl.mesh, shd.named_rules("tp")))
+        return self._shard_cache[1]
+
+    def param_shardings(self):
+        st = self.state_shardings()
+        return None if st is None else st.params
 
     def _params_template(self):
         return self.model.abstract_params()
@@ -126,10 +203,18 @@ class WorkerProcessGroup:
     # ------------------------------------------------------ op handlers
     def _op_init(self, seed: int = 0):
         params = self.model.init_params(jax.random.PRNGKey(seed))
+        st = self.state_shardings()
+        if st is not None:
+            # lay the state out on this group's mesh slice (per-WPG
+            # shardings); the StateManager records each leaf's spec so
+            # later prefetch/migrate rebuilds the layout
+            params = jax.device_put(params, st.params)
         if self.spec.role in ("train", "critic"):
             # critic deployments run their own optim_step (value updates)
-            self._store(params=params,
-                        opt_state=opt.init(params, self.adamw_cfg))
+            opt_state = opt.init(params, self.adamw_cfg)
+            if st is not None:
+                opt_state = jax.device_put(opt_state, st.opt_state)
+            self._store(params=params, opt_state=opt_state)
         else:
             self._store(params=params)
         self._initialized = True
@@ -228,7 +313,12 @@ class WorkerProcessGroup:
     def _op_sync_weights(self, target_wpg: "WorkerProcessGroup",
                          target_shardings=None):
         """Materialise training-visible weights into the rollout deployment's
-        layout (zero-redundancy resharding via StateManager)."""
+        layout (zero-redundancy resharding via StateManager). By default the
+        target layout is the TARGET WPG's own per-group shardings — a
+        rollout deployment on a different mesh slice receives the weights
+        resharded onto ITS slice, not this group's."""
+        if target_shardings is None and hasattr(target_wpg, "param_shardings"):
+            target_shardings = target_wpg.param_shardings()
         tree = self.sm.sync_weights(self.job_prefix, self._params_template(),
                                     target_shardings)
         target_wpg._store(params=tree)
