@@ -1,0 +1,39 @@
+"""CI perf smoke: one steady-state incremental repack planning pass must
+stay cheap at fleet scale.
+
+The ceiling is deliberately generous (CI runners are slow and noisy —
+locally the n=256 pass runs ~2 ms): this guards against the O(fleet)
+regression class, e.g. someone re-introducing a full policy clone or a
+per-pass re-fit of every job into the ``RepackIndex`` path, not against
+constant-factor drift. Wired as a warn-only (``continue-on-error``) CI
+step so a slow runner can never block a merge.
+
+    PYTHONPATH=src python -m benchmarks.perf_smoke [--n 256] [--ceiling-ms 20]
+
+Exit code 1 when the measured pass exceeds the ceiling.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.hrrs_bench import _repack_plan_inc_us
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=256,
+                    help="resident jobs in the synthetic fleet")
+    ap.add_argument("--ceiling-ms", type=float, default=20.0,
+                    help="warn threshold for one planning pass")
+    args = ap.parse_args(argv)
+    us = _repack_plan_inc_us(args.n, iters=20)
+    ms = us / 1000.0
+    verdict = "OK" if ms <= args.ceiling_ms else "SLOW"
+    print(f"perf-smoke: repack_plan_inc n={args.n}: {ms:.2f} ms "
+          f"(ceiling {args.ceiling_ms:.0f} ms) {verdict}")
+    return 0 if ms <= args.ceiling_ms else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,9 +24,14 @@ one-shot decision at cold→warm promotion.
   realized-vs-planned occupancy drift plans an incremental repack
   (migration-cost floor respected), per-job phase drift re-profiles and
   re-fits a diverged job, and queue pressure sheds the worst-interfering
-  job off a deep-queued group. Decisions batch into ordered
-  :class:`~repro.core.scheduler.placement.JobMove` lists realized through
-  ``Router.reassign_jobs`` (vacate-before-fill, per-move rollback).
+  job off a deep-queued group. Repack planning goes through the
+  :class:`~repro.core.scheduler.repack_index.RepackIndex` (dirty groups
+  only — flat cost at fleet scale; ``plan_repack`` stays the oracle), and
+  a per-job migration cooldown (``migration_cooldown_s``) pins recently
+  moved jobs so pressure relief cannot ping-pong them. Decisions batch
+  into ordered :class:`~repro.core.scheduler.placement.JobMove` lists
+  realized through ``Router.reassign_jobs`` (vacate-before-fill, per-move
+  rollback).
 - **Capacity adjuster** (§4.4). Queue-depth / occupancy telemetry drives
   group spawn (``Router.ensure_group``) and retire
   (``Router.retire_group``), bounded by ``min_groups`` / ``max_groups``.
@@ -90,6 +95,10 @@ class PlacementDirector:
         # concurrent migration of the same job would drop the first one's
         # admission hold mid-copy)
         self._migrating: set = set()
+        # realized-migration timestamps backing the cooldown hysteresis:
+        # repack and pressure-shed may not move a job again until
+        # migration_cooldown_s after its last realized move
+        self._last_migrated: Dict[str, float] = {}
         # measured migration-cost floors (EWMA of realized costs from
         # Router.migrate_log), keyed by cross_mesh; None = not yet measured
         # (fall back to the configured floors). VirtualClock runs record
@@ -137,6 +146,21 @@ class PlacementDirector:
                                               self.router.now())
                 self._plan_dirty = False
             return self._plan
+
+    def _cooled(self, now: float) -> frozenset:
+        """Jobs inside their migration cooldown: moved less than
+        ``migration_cooldown_s`` ago, pinned against repack/shed (the
+        hysteresis that keeps pressure relief from ping-ponging one job
+        between two groups). Promotions and drift re-fits bypass this —
+        when the trace itself changed, correctness beats stability.
+        Expired entries are dropped in passing. Call under ``_lock``."""
+        cd = self.cfg.migration_cooldown_s
+        if cd <= 0.0:
+            return frozenset()
+        for j in [j for j, t in self._last_migrated.items()
+                  if now - t >= cd]:
+            del self._last_migrated[j]
+        return frozenset(self._last_migrated)
 
     def _cold_groups(self, exclude_job: Optional[str] = None) -> set:
         return {s.group_id for s in self._jobs.values()
@@ -378,7 +402,8 @@ class PlacementDirector:
                                     force=force,
                                     min_gain=self.migration_floor(False),
                                     cross_min_gain=self.migration_floor(True),
-                                    mesh_of=mesh_of)
+                                    mesh_of=mesh_of,
+                                    exclude=self._cooled(now))
         if res is None:
             return []
         plan, drifted = res
@@ -434,6 +459,7 @@ class PlacementDirector:
     def on_job_removed(self, job_id: str):
         with self._lock:
             js = self._jobs.pop(job_id, None)
+            self._last_migrated.pop(job_id, None)
             self.policy.remove(job_id)
             self.router.executor.drop_job_telemetry(job_id)
             self._plan_dirty = True
@@ -513,6 +539,7 @@ class PlacementDirector:
                 self._ingest_migration_costs()
                 for m, moved, err in results:
                     if err is None:
+                        self._last_migrated[m.job_id] = now
                         self._log("migrate", job=m.job_id, src=m.src_group,
                                   dst=m.dst_group, bytes=moved, t=now)
                         continue
@@ -578,7 +605,11 @@ class PlacementDirector:
             return []
         moves: List[JobMove] = []
         for gid in deep:
-            mv = self._shed(now, gid, telem)
+            # a job shed earlier in THIS pass is pinned for the rest of it:
+            # without this, a second deep group could immediately shed the
+            # newcomer back before the move is even realized
+            mv = self._shed(now, gid, telem,
+                            moved=frozenset(m.job_id for m in moves))
             if mv is not None:
                 moves.append(mv)
         if not moves and len(self.policy.groups) < self.cfg.max_groups:
@@ -591,11 +622,13 @@ class PlacementDirector:
                 self._spawn_group(now, reason=f"queue_depth:g{deep[0]}")
         return moves
 
-    def _shed(self, now: float, gid: int, telem: Dict) -> Optional[JobMove]:
+    def _shed(self, now: float, gid: int, telem: Dict,
+              moved: frozenset = frozenset()) -> Optional[JobMove]:
         """Move the worst-interfering warm resident OFF a deep-queued group
         (spawning a spare when nothing else fits)."""
-        victim = self.reconciler.pick_shed(self.policy.group(gid),
-                                           exclude=self._migrating)
+        victim = self.reconciler.pick_shed(
+            self.policy.group(gid),
+            exclude=frozenset(self._migrating) | self._cooled(now) | moved)
         if victim is None:
             return None
         cold = self._cold_groups()

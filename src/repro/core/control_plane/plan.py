@@ -67,6 +67,22 @@ class DirectorConfig:
     #   mesh-slice domains (the reshard-included cost); None = start at
     #   migration_floor_s until the director has measured real cross-mesh
     #   migrations from Router.migrate_log
+    # ---- incremental repack planning + stability --------------------------
+    incremental_repack: bool = True   # reconcile passes plan deltas with the
+    #   RepackIndex (dirty groups only, copy-on-write overlay); False falls
+    #   back to the full plan_repack oracle on every pass
+    repack_dest_search: int = 12      # cap on exact micro-shift searches per
+    #   re-fitted job — the most-promising destinations by duty-overlap
+    #   bound; 0 = search every non-pruned group (the oracle's behavior)
+    migration_cooldown_s: float = 30.0  # hysteresis: a job migrated at t is
+    #   pinned against further repack/shed moves until t + cooldown, so
+    #   pressure relief cannot ping-pong it between two groups; promotions
+    #   and drift re-fits bypass the cooldown (correctness beats stability
+    #   when the trace itself changed). 0 disables.
+    interference_ewma: float = 0.2    # weight folding realized-vs-planned
+    #   busy overlap into each group's interference_scale (a group whose
+    #   execution keeps landing outside the plan scores pessimistically in
+    #   phase_interference until reality re-converges); 0 disables
 
 
 def trace_from_cycles(cycles: Sequence[Dict[str, float]],

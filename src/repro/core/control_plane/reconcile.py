@@ -40,28 +40,40 @@ from repro.core.control_plane.plan import (DirectorConfig, JobTrace,
 from repro.core.scheduler.placement import (NodeGroup, Placed,
                                             PlacementPolicy, RepackPlan,
                                             phase_interference)
+from repro.core.scheduler.repack_index import RepackIndex
 
 
 class Reconciler:
     """Drift detection + repack planning over one PlacementPolicy.
 
     Owns the rolling state the triggers need (repack cadence anchor,
-    per-group busy-window cursors); holds no lock of its own — the director
-    serializes calls under its decision lock."""
+    per-group busy-window cursors, the incremental repack index); holds no
+    lock of its own — the director serializes calls under its decision
+    lock."""
 
     def __init__(self, policy: PlacementPolicy, cfg: DirectorConfig):
         self.policy = policy
         self.cfg = cfg
+        self.index = RepackIndex(policy)
         self._last_repack_t: Optional[float] = None
         self._busy_cursors: Dict[int, int] = {}
 
     # ------------------------------------------- trigger 1: occupancy drift
     def due(self, now: float) -> bool:
-        """Periodic gate: the first observation anchors the cadence."""
+        """Periodic gate — a PURE predicate. Unanchored (no observation
+        yet) is never due; :meth:`check`'s first observation anchors the
+        cadence. (The old version mutated ``_last_repack_t`` inside this
+        predicate, so merely ASKING whether a pass was due silently
+        re-anchored the clock.)"""
         if self._last_repack_t is None:
-            self._last_repack_t = now
             return False
         return now - self._last_repack_t >= self.cfg.repack_interval_s
+
+    def anchor(self, now: float) -> None:
+        """Anchor / advance the periodic cadence. Called on the first
+        observation and after each SCHEDULED pass — never by forced
+        passes, which would otherwise push back the next scheduled one."""
+        self._last_repack_t = now
 
     def occupancy_drift(self, executor) -> List[dict]:
         """Realized-vs-planned busy overlap per group since the last check.
@@ -81,6 +93,15 @@ class Reconciler:
             overlap = sum(min(g.planned_overlap(t0, t1), t1 - t0)
                           for _, _, t0, t1 in windows)
             ratio = overlap / busy
+            beta = self.cfg.interference_ewma
+            if beta > 0.0:
+                # fold realized-vs-planned overlap back into the group's
+                # interference prediction: fully on-plan (ratio 1) decays
+                # toward neutral 1.0, fully off-plan (ratio 0) toward a 2x
+                # pessimistic score, so planners route new load away from
+                # groups whose execution keeps missing the plan
+                target = min(2.0, max(1.0, 2.0 - ratio))
+                g.interference_scale += beta * (target - g.interference_scale)
             if ratio < self.cfg.plan_overlap_min:
                 drifted.append(dict(group=g.group_id,
                                     busy_s=round(busy, 6),
@@ -92,29 +113,56 @@ class Reconciler:
               force: bool = False,
               min_gain: Optional[float] = None,
               cross_min_gain: Optional[float] = None,
-              mesh_of: Optional[Dict[int, int]] = None
+              mesh_of: Optional[Dict[int, int]] = None,
+              exclude: frozenset = frozenset()
               ) -> Optional[Tuple[RepackPlan, List[dict]]]:
         """The periodic reconcile pass: when due (or forced), measure
         occupancy drift and — if any group diverged — plan an incremental
         repack against the live absolute-time windows. Returns
         ``(plan, drifted_groups)`` or None when nothing is due/diverged.
 
+        Cadence rules: the first observation anchors the clock (and plans
+        nothing unless forced); only a SCHEDULED (due) pass re-anchors it,
+        so forced passes never delay the next scheduled one.
+
+        Planning goes through the :class:`RepackIndex` (drifted groups are
+        marked dirty, candidates come from dirty groups only) unless
+        ``cfg.incremental_repack`` is off, which falls back to the full
+        ``plan_repack`` oracle.
+
         ``min_gain`` / ``cross_min_gain`` override the configured
         migration-cost floor with the director's MEASURED same-mesh /
         cross-mesh migration costs; ``mesh_of`` maps group ids to
         mesh-slice domains so the planner knows which moves pay the
-        cross-mesh reshard."""
-        if not force and not self.due(now):
+        cross-mesh reshard; ``exclude`` pins jobs (the director's
+        migration cooldown)."""
+        if self._last_repack_t is None:
+            self.anchor(now)
+            if not force:
+                return None
+        elif self.due(now):
+            self.anchor(now)
+        elif not force:
             return None
-        self._last_repack_t = now
         drifted = self.occupancy_drift(executor)
         if not drifted and not force:
             return None
-        plan = self.policy.plan_repack(
-            origin=now, groups=eligible,
-            min_gain=self.cfg.migration_floor_s if min_gain is None
-            else min_gain,
-            cross_min_gain=cross_min_gain, mesh_of=mesh_of)
+        floor = (self.cfg.migration_floor_s if min_gain is None
+                 else min_gain)
+        for d in drifted:
+            self.index.mark_dirty(d["group"])
+        if self.cfg.incremental_repack:
+            cap = self.cfg.repack_dest_search
+            plan = self.index.plan(
+                origin=now, groups=eligible, min_gain=floor,
+                cross_min_gain=cross_min_gain, mesh_of=mesh_of,
+                exclude=exclude,
+                max_dest_search=cap if cap > 0 else None)
+        else:
+            plan = self.policy.plan_repack(
+                origin=now, groups=eligible, min_gain=floor,
+                cross_min_gain=cross_min_gain, mesh_of=mesh_of,
+                exclude=exclude)
         return plan, drifted
 
     # --------------------------------------------- trigger 2: phase drift

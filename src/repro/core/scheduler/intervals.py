@@ -109,6 +109,44 @@ class IntervalSet:
         allocated; idle time behind ``now`` is spent, not banked)."""
         self.subtract(float("-inf"), t)
 
+    def free_many(self, windows: Sequence[Interval]):
+        """Return many [s, e) windows to the free set in ONE linear merge —
+        equivalent to repeated :meth:`free` but O(N + K) instead of
+        O(N * K) (each ``free`` pays a list insert). The bulk path behind
+        ``NodeGroup.release_resident``, whose freed-cycle lists run to
+        thousands of windows at fleet horizons."""
+        add = sorted((s, e) for s, e in windows if e > s)
+        if not add:
+            return
+        out_s: List[float] = []
+        out_e: List[float] = []
+        starts, ends = self.starts, self.ends
+        i = j = 0
+        cs: float = 0.0
+        ce: float = float("-inf")
+        first = True
+        while i < len(starts) or j < len(add):
+            if j >= len(add) or (i < len(starts)
+                                 and starts[i] <= add[j][0]):
+                s, e = starts[i], ends[i]
+                i += 1
+            else:
+                s, e = add[j]
+                j += 1
+            if first:
+                cs, ce, first = s, e, False
+            elif s <= ce:
+                if e > ce:
+                    ce = e
+            else:
+                out_s.append(cs)
+                out_e.append(ce)
+                cs, ce = s, e
+        if not first:
+            out_s.append(cs)
+            out_e.append(ce)
+        self.starts, self.ends = out_s, out_e
+
     def free(self, s: float, e: float):
         """Return [s, e) to the free set, merging neighbours."""
         if e <= s:

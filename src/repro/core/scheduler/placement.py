@@ -28,8 +28,8 @@ adjuster drives.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.scheduler.intervals import IntervalSet
@@ -59,6 +59,10 @@ class NodeGroup:
     free: IntervalSet                   # free windows over the planning horizon
     resident: List["Placed"] = dataclasses.field(default_factory=list)
     horizon_end: float = 0.0            # absolute end of the planned span
+    rev: int = 0                        # bumped on every resident change —
+    #   the incremental repack planner's dirty-tracking signal
+    interference_scale: float = 1.0     # EWMA correction the reconciler feeds
+    #   back from realized busy overlap; multiplies phase_interference
 
     def __post_init__(self):
         if self.horizon_end == 0.0 and len(self.free):
@@ -107,6 +111,109 @@ class NodeGroup:
         free set (idempotent: already-busy spans stay busy)."""
         for s, e in self._projected(p, lo, hi):
             self.free.subtract(s, e)
+
+    def carve_cycles(self, trace: JobTrace, shift: float, origin: float,
+                     n_cycles: int, once: bool = False):
+        """Subtract ``n_cycles`` of ``trace``'s segments anchored at
+        ``origin + shift`` from the free set (``subtract``, not
+        ``allocate``: on a live group later cycles may partially overlap
+        windows already carved by measured completions — the span must end
+        up busy either way). Single implementation behind ``place_warm``,
+        ``place_at`` and the incremental planner's overlay."""
+        for c in range(n_cycles):
+            base = origin + c * trace.period + shift
+            for a, d in trace.segments:
+                self.free.subtract(base + a, base + a + d)
+            if once:
+                break
+
+    def release_resident(self, p: "Placed", n_cycles: int):
+        """Drop ``p`` from the residents and return its windows to the free
+        set: the allocated cycle block plus the projected cycles beyond it
+        (``extend_to`` carvings), MINUS the spans surviving residents'
+        projections still occupy. Computed as one batched interval sweep
+        (freed-union minus survivor-union, then ``free_many``) — the naive
+        free-everything-then-re-carve-survivors version paid one bisecting
+        list insert per window and dominated repack planning at fleet
+        horizons. The group-local half of :meth:`PlacementPolicy.remove`,
+        shared with the incremental planner's copy-on-write overlay."""
+        self.resident = [r for r in self.resident if r.job_id != p.job_id]
+        self.rev += 1
+        freed: List[Tuple[float, float]] = []
+        for c in range(n_cycles):
+            base = p.origin + c * p.trace.period + p.shift
+            for a, d in p.trace.segments:
+                freed.append((base + a, base + a + d))
+            if p.once:
+                break
+        if not p.once:
+            anchor = p.origin + p.shift
+            c = n_cycles
+            while anchor + c * p.trace.period <= self.horizon_end:
+                base = anchor + c * p.trace.period
+                for a, d in p.trace.segments:
+                    if base + a < self.horizon_end:
+                        freed.append((base + a,
+                                      min(base + a + d, self.horizon_end)))
+                c += 1
+        if not freed:
+            return
+        freed.sort()
+        lo, hi = freed[0][0], max(e for _, e in freed)
+        occupied: List[Tuple[float, float]] = []
+        # survivors' planned windows clipped to [lo, hi) — the _projected
+        # generator inlined: this loop enumerates every surviving window in
+        # the span and generator frames double its cost at fleet horizons
+        for other in self.resident:
+            period = other.trace.period
+            if period <= 0.0:
+                continue
+            anchor = other.origin + other.shift
+            segs = other.trace.segments
+            c = 0 if other.once else max(0, int((lo - anchor) // period) - 1)
+            while True:
+                base = anchor + c * period
+                if base > hi:
+                    break
+                for a, d in segs:
+                    s, e = base + a, base + a + d
+                    if e > lo and s < hi:
+                        occupied.append((s if s > lo else lo,
+                                         e if e < hi else hi))
+                if other.once:
+                    break
+                c += 1
+        occupied.sort()
+
+        def _union(ws):
+            u: List[Tuple[float, float]] = []
+            for s, e in ws:
+                if u and s <= u[-1][1]:
+                    if e > u[-1][1]:
+                        u[-1] = (u[-1][0], e)
+                else:
+                    u.append((s, e))
+            return u
+
+        fu, ou = _union(freed), _union(occupied)
+        give: List[Tuple[float, float]] = []
+        j = 0
+        for s, e in fu:
+            cur = s
+            while j < len(ou) and ou[j][1] <= cur:
+                j += 1
+            k = j
+            while k < len(ou) and ou[k][0] < e:
+                os_, oe = ou[k]
+                if os_ > cur:
+                    give.append((cur, os_))
+                cur = oe
+                if oe >= e:
+                    break
+                k += 1
+            if cur < e:
+                give.append((cur, e))
+        self.free.free_many(give)
 
     def extend_to(self, new_end: float):
         """Roll the planning horizon forward to ``new_end``: the new span is
@@ -179,6 +286,10 @@ class RepackPlan:
     reshifts: Tuple[str, ...] = ()      # jobs re-anchored on their own group
     skipped: Tuple[JobMove, ...] = ()   # gain below the migration-cost floor
     fitted: Optional["PlacementPolicy"] = None   # the re-fitted state
+    incremental: bool = False           # delta plan (RepackIndex): applied
+    #   move-by-move via ``deltas`` instead of adopting a fitted clone
+    deltas: Tuple[JobMove, ...] = ()    # ordered re-anchor sequence (cross-
+    #   group moves AND same-group reshifts, in planning order)
 
     def __bool__(self) -> bool:
         return bool(self.moves or self.reshifts)
@@ -207,10 +318,16 @@ def candidate_shifts(trace: JobTrace, free: IntervalSet,
     ``origin`` translates the trace into the free set's absolute frame."""
     cands = {0.0}
     limit = cfg.alpha * trace.period
-    for (a, _), (ws, _) in itertools.product(trace.segments, free.intervals()):
-        d = ws - a - origin
-        if 0.0 <= d <= limit:
-            cands.add(d)
+    starts = free.starts
+    for a, _ in trace.segments:
+        # only window starts in [origin + a, origin + a + limit] can yield
+        # an in-range delta — bisect the sorted starts instead of scanning
+        # every free window (the free list grows with the horizon; the
+        # search range is one period)
+        lo = bisect.bisect_left(starts, origin + a)
+        hi = bisect.bisect_right(starts, origin + a + limit)
+        for ws in starts[lo:hi]:
+            cands.add(ws - a - origin)
     out = sorted(cands)
     if len(out) > cfg.max_candidates:
         step = len(out) / cfg.max_candidates
@@ -232,11 +349,42 @@ def best_shift(trace: JobTrace, free: IntervalSet,
     return best
 
 
+def wrapped_arcs(start: float, dur: float,
+                 period: float) -> Tuple[Tuple[float, float], ...]:
+    """The linear pieces of the arc ``[start, start+dur)`` on the circle
+    ``[0, period)``: one piece when it fits, two when it crosses the period
+    boundary, the whole circle when the duration covers it."""
+    start %= period
+    if dur >= period:
+        return ((0.0, period),)
+    end = start + dur
+    if end <= period:
+        return ((start, end),)
+    return ((start, period), (0.0, end - period))
+
+
 def phase_interference(trace: JobTrace, shift: float,
                        group: NodeGroup, origin: float = 0.0,
                        exclude: Optional[str] = None) -> float:
     """Predicted overlap of the shifted active segments with resident jobs'
     active segments over one hyper-cycle (lower = better, §4.3.2).
+
+    Overlap is measured on each RESIDENT's cycle circle: both the
+    candidate's shifted segments and the resident's anchored segments are
+    wrapped at the resident's period boundary, so a segment crossing the
+    cycle edge contributes its wrapped tail. (The pre-fix code clipped the
+    overlap to ``[s0, s0+d) ∩ [rs, rs+rd)`` linearly, silently dropping
+    anything past the boundary — interference near the cycle edge was
+    systematically undercounted.) Mixed periods keep the paper's
+    one-hyper-cycle approximation: the candidate is folded onto the
+    resident's circle, i.e. the score is the overlap within one
+    representative resident cycle, not the exact steady-state average over
+    the full (possibly enormous) joint hyper-period.
+
+    The sum is scaled by ``group.interference_scale`` — the reconciler's
+    EWMA correction from realized busy overlap (1.0 = trust the
+    prediction; a drifting group scores pessimistically so planners prefer
+    placements with slack there).
 
     ``exclude`` skips one resident by job id — the form used when scoring a
     job that is itself already placed on the group (repack / shed ranking).
@@ -245,14 +393,17 @@ def phase_interference(trace: JobTrace, shift: float,
     for placed in group.resident:
         if exclude is not None and placed.job_id == exclude:
             continue
-        for a, d in trace.segments:
-            s0 = (origin + a + shift) % placed.trace.period
-            for ra, rd in placed.trace.segments:
-                rs = (placed.origin + ra + placed.shift) % placed.trace.period
-                lo = max(s0, rs)
-                hi = min(s0 + d, rs + rd)
-                total += max(0.0, hi - lo)
-    return total
+        period = placed.trace.period
+        if period <= 0.0:
+            continue
+        cand_arcs = [arc for a, d in trace.segments
+                     for arc in wrapped_arcs(origin + a + shift, d, period)]
+        for ra, rd in placed.trace.segments:
+            for r_lo, r_hi in wrapped_arcs(placed.origin + ra + placed.shift,
+                                           rd, period):
+                for s_lo, s_hi in cand_arcs:
+                    total += max(0.0, min(s_hi, r_hi) - max(s_lo, r_lo))
+    return total * group.interference_scale
 
 
 def group_duty(group: NodeGroup) -> float:
@@ -333,6 +484,7 @@ class PlacementPolicy:
                                             nodes), g.group_id, 0.0,
                            origin=origin, once=True, n_cycles=1)
                 g.resident.append(p)
+                g.rev += 1
                 self.placed[job_id] = p
                 return p
         return None
@@ -369,18 +521,11 @@ class PlacementPolicy:
             return None
         scored.sort(key=lambda t: t[0])
         _, g, delta = scored[0]
-        for c in range(n_cycles):
-            base = origin + c * trace.period + delta
-            for a, d in trace.segments:
-                # subtract, not allocate: feasibility was checked for the
-                # aligned cycle, but on a LIVE group later cycles may
-                # partially overlap windows already carved by measured
-                # completions (note_busy) — the window must end up busy
-                # either way, never silently stay free
-                g.free.subtract(base + a, base + a + d)
+        g.carve_cycles(trace, delta, origin, n_cycles)
         p = Placed(job_id, trace, g.group_id, delta, origin=origin,
                    n_cycles=n_cycles)
         g.resident.append(p)
+        g.rev += 1
         self.placed[job_id] = p
         return p
 
@@ -394,15 +539,11 @@ class PlacementPolicy:
         g = self._by_id[group_id]
         n = n_cycles or max(1, int(self.cfg.horizon
                                    // max(trace.period, 1e-9)))
-        for c in range(n):
-            base = origin + c * trace.period + shift
-            for a, d in trace.segments:
-                g.free.subtract(base + a, base + a + d)
-            if once:
-                break
+        g.carve_cycles(trace, shift, origin, n, once=once)
         p = Placed(job_id, trace, group_id, shift, origin=origin, once=once,
                    n_cycles=n)
         g.resident.append(p)
+        g.rev += 1
         self.placed[job_id] = p
         return p
 
@@ -417,7 +558,9 @@ class PlacementPolicy:
             c = NodeGroup(g.group_id, g.nodes,
                           IntervalSet(g.free.intervals()),
                           resident=list(g.resident),
-                          horizon_end=g.horizon_end)
+                          horizon_end=g.horizon_end,
+                          rev=g.rev,
+                          interference_scale=g.interference_scale)
             groups.append(c)
         out = PlacementPolicy(groups, self.cfg)
         out.placed = dict(self.placed)
@@ -431,37 +574,17 @@ class PlacementPolicy:
         g = self._by_id.get(p.group_id)
         if g is None:
             return                     # group already retired
-        g.resident = [r for r in g.resident if r.job_id != job_id]
         n_cycles = p.n_cycles or n_cycles or max(
             1, int(self.cfg.horizon // p.trace.period))
-        freed_from = p.origin
-        for c in range(n_cycles):
-            base = p.origin + c * p.trace.period + p.shift
-            for a, d in p.trace.segments:
-                g.free.free(base + a, base + a + d)
-        # projected cycles beyond the allocated block (extend_to carvings)
-        if not p.once:
-            anchor = p.origin + p.shift
-            c = n_cycles
-            while anchor + c * p.trace.period <= g.horizon_end:
-                base = anchor + c * p.trace.period
-                for a, d in p.trace.segments:
-                    if base + a < g.horizon_end:
-                        g.free.free(base + a, min(base + a + d, g.horizon_end))
-                c += 1
-        # the blanket free() above may have returned windows that OTHER
-        # residents also occupy (overlapping projections are possible
-        # beyond the feasibility-checked blocks): re-carve every remaining
-        # resident over the affected span so their reservations survive
-        for other in g.resident:
-            g.carve_resident(other, freed_from, g.horizon_end)
+        g.release_resident(p, n_cycles)
 
     # ----------------------------------------------------------- repack
     def plan_repack(self, origin: float = 0.0,
                     groups: Optional[Sequence[int]] = None,
                     min_gain: float = 0.0,
                     cross_min_gain: Optional[float] = None,
-                    mesh_of: Optional[Dict[int, int]] = None) -> RepackPlan:
+                    mesh_of: Optional[Dict[int, int]] = None,
+                    exclude: frozenset = frozenset()) -> RepackPlan:
         """Plan a repacking event (§4.3.2) WITHOUT mutating the live state.
 
         Jobs are re-fitted one at a time on a clone, by descending duty
@@ -479,11 +602,16 @@ class PlacementPolicy:
         domains in ``mesh_of`` (group id -> mesh-slice index) must clear
         ``cross_min_gain`` — the realized cross-mesh reshard cost the
         director measures from ``Router.migrate_log``. Unknown groups are
-        treated as crossing (the conservative floor)."""
+        treated as crossing (the conservative floor).
+
+        ``exclude`` pins jobs in place without re-fitting them — the
+        director feeds it the recently-migrated set so the cooldown
+        hysteresis also holds for full repacks."""
         clone = self.clone()
         for g in clone.groups:
             g.advance_to(origin)
-        jobs = sorted(((j, p) for j, p in clone.placed.items() if not p.once),
+        jobs = sorted(((j, p) for j, p in clone.placed.items()
+                       if not p.once and j not in exclude),
                       key=lambda kv: (-kv[1].trace.duty(), kv[0]))
         moves: List[JobMove] = []
         reshifts: List[str] = []
@@ -534,7 +662,23 @@ class PlacementPolicy:
     def apply_repack(self, plan: RepackPlan):
         """Adopt a plan's re-fitted placement state. Call under the same
         lock / quiescence the plan was computed under — the plan's windows
-        are a re-fit of the state as of ``plan.origin``."""
+        are a re-fit of the state as of ``plan.origin``.
+
+        An incremental plan (``plan.incremental``) carries no fitted clone;
+        its ordered ``deltas`` are replayed move-by-move (remove + pin at
+        the planned anchor). A delta whose job has since vanished or moved
+        off the planned source group is stale and skipped."""
+        if plan.incremental:
+            for m in plan.deltas:
+                cur = self.placed.get(m.job_id)
+                if cur is None or cur.group_id != m.src_group:
+                    continue           # stale: state changed since planning
+                if self.group(m.dst_group) is None:
+                    continue
+                self.remove(m.job_id)
+                self.place_at(m.job_id, cur.trace, m.dst_group, m.shift,
+                              origin=m.origin, n_cycles=m.n_cycles)
+            return
         if plan.fitted is None:
             raise ValueError("plan has no fitted state (already applied?)")
         src = plan.fitted

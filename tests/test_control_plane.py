@@ -491,6 +491,15 @@ def test_serve_auto_placement_end_to_end():
         ga = c.director.job_state("auto-a").group_id
         gb = c.director.job_state("auto-b").group_id
         assert ga == gb, c.director.events
+        # wait for the drained profiling group to retire before the next
+        # arrival: retire runs on the director's poll cadence, and adding
+        # auto-c first would legitimately reuse the still-live free group
+        # instead of spawning (a race, not the behavior under test)
+        while not any(e["event"] == "retire_group"
+                      for e in c.director.events):
+            assert time.monotonic() < deadline, \
+                f"profiling group never retired; events={c.director.events}"
+            time.sleep(0.05)
         # the third arrival must spawn a fresh group for clean profiling
         spawns_before = sum(e["event"] == "spawn_group"
                             for e in c.director.events)

@@ -221,7 +221,8 @@ def test_occupancy_drift_detection():
     # cycle 0+1 execute exactly as planned
     run_op(6.0, 2.0)
     run_op(14.0, 2.0)
-    assert rec.due(clock.now()) is False       # first call anchors cadence
+    assert rec.due(clock.now()) is False       # unanchored: pure, never due
+    assert rec.check(clock.now(), ex) is None  # first observation anchors
     assert rec.occupancy_drift(ex) == []
     # the realized schedule slips: execution lands in the planned gaps
     run_op(17.0, 2.0)
@@ -231,6 +232,35 @@ def test_occupancy_drift_detection():
     drifted = rec.occupancy_drift(ex)
     assert drifted and drifted[0]["group"] == 0
     assert drifted[0]["overlap_ratio"] < 0.5
+
+
+def test_due_is_pure_and_forced_check_keeps_cadence():
+    """Regression: ``due()`` used to MUTATE ``_last_repack_t`` (merely
+    asking whether a pass was due silently re-anchored the cadence) and a
+    forced ``check()`` also re-anchored it, so every manual reconcile
+    pushed back the next scheduled one. ``due()`` is now a pure predicate
+    and only SCHEDULED (due) passes advance the clock."""
+    clock = VirtualClock()
+    ex = TaskExecutor(now=clock, policy="hrrs")
+    pol = _policy(1, horizon=400.0)
+    pol.place_at("jobA", JobTrace(8.0, ((6.0, 2.0),)), 0, 0.0)
+    rec = Reconciler(pol, DirectorConfig(repack_interval_s=10.0))
+    # pure: asking (repeatedly) leaves the unanchored cadence untouched
+    assert rec.due(5.0) is False
+    assert rec.due(5.0) is False
+    assert rec._last_repack_t is None
+    # the first observation anchors and plans nothing
+    assert rec.check(0.0, ex) is None
+    assert rec._last_repack_t == 0.0
+    # a forced pass mid-interval runs...
+    assert rec.check(5.0, ex, force=True) is not None
+    # ...but must NOT re-anchor: the scheduled pass at t=10 still fires
+    # (the old code would have re-anchored to 5.0, making due(10.0) False)
+    assert rec._last_repack_t == 0.0
+    assert rec.due(10.0) is True
+    rec.check(10.0, ex)
+    assert rec._last_repack_t == 10.0      # the scheduled pass re-anchors
+    assert rec.due(19.0) is False and rec.due(20.0) is True
 
 
 # -------------------------------------------------- cold-job fold trim
@@ -376,10 +406,14 @@ def test_pressure_scenario_consolidates_and_spreads():
     sheds its worst-interfering job onto a freshly spawned spare — every
     step visible in ``director.events``."""
     clock, router = _virtual_router()
+    # cooldown off: this scripted scenario sheds a job IMMEDIATELY after
+    # the consolidation migrated it (the hysteresis that prevents exactly
+    # that in production is covered by test_cooldown_prevents_shed_ping_pong)
     director = PlacementDirector(
         router, DirectorConfig(horizon=400.0, min_groups=1,
                                spawn_queue_depth=4, warmup_cycles=0,
-                               repack_interval_s=1e9),
+                               repack_interval_s=1e9,
+                               migration_cooldown_s=0.0),
         initial_groups=[0, 1, 2])
     depA = router.deploy(_spec("jobA"), group_id=0)
     depB = router.deploy(_spec("jobB", "jobB-train"), group_id=1)
@@ -432,6 +466,69 @@ def test_pressure_scenario_consolidates_and_spreads():
     plan = director.cluster_plan()
     assert plan.assignment("jobA").group_id == ja.group_id
     assert plan.assignment("jobB").group_id == jb.group_id
+
+
+def test_cooldown_prevents_shed_ping_pong():
+    """The migration-cooldown hysteresis: under sustained queue pressure
+    on BOTH groups, each shed lands the victim on the other deep-queued
+    group, which promptly sheds it back — with the cooldown OFF the job
+    ping-pongs forever; with it ON a just-migrated job is pinned until the
+    cooldown expires, then becomes sheddable again."""
+
+    def build(cooldown):
+        clock, router = _virtual_router()
+        director = PlacementDirector(
+            router, DirectorConfig(horizon=400.0, min_groups=1,
+                                   spawn_queue_depth=4, warmup_cycles=0,
+                                   repack_interval_s=1e9,
+                                   migration_cooldown_s=cooldown),
+            initial_groups=[0, 1])
+        deps = {}
+        for job, gid in (("jobA", 0), ("jobB", 0), ("jobC", 1)):
+            dep = router.deploy(_spec(job, f"{job}-train"), group_id=gid)
+            sm = router.state_managers[gid]
+            wpg = router.wpgs[dep.spec.deployment_id]
+            sm.register(wpg.job_prefix, {"w": np.ones((8, 8), np.float32)})
+            deps[job] = dep
+        # jobA/jobB are force-pinned overlapping on g0 (the scripted
+        # drifted state); both score interference 2, so the job_id
+        # tie-break makes jobA the deterministic shed victim — and its
+        # 2s segment FITS the 4s gaps on either group, so each shed can
+        # land it on the other deep-queued group
+        director.adopt_warm("jobA", JobTrace(8.0, ((0.0, 2.0),)), 0)
+        director.adopt_warm("jobB", JobTrace(8.0, ((0.0, 4.0),)), 0)
+        director.adopt_warm("jobC", JobTrace(8.0, ((0.0, 2.0),)), 1)
+        # sustained pressure on both groups (never drained)
+        for i in range(5):
+            deps["jobA"].forward(i, exec_estimate=1.0)
+            deps["jobC"].forward(i, exec_estimate=1.0)
+        return clock, director
+
+    def sheds_of(director, job):
+        return [(e["src"], e["dst"]) for e in director.events
+                if e["event"] == "shed" and e["job"] == job]
+
+    # --- control: cooldown off — jobA bounces g0 -> g1 -> g0
+    clock, director = build(0.0)
+    director.poll()                   # deep g0 sheds jobA onto g1
+    assert sheds_of(director, "jobA") == [(0, 1)]
+    director.poll()                   # deep g1 sheds the newcomer back
+    assert sheds_of(director, "jobA") == [(0, 1), (1, 0)]
+
+    # --- cooldown on: the just-migrated job is pinned
+    clock, director = build(60.0)
+    director.poll()
+    assert sheds_of(director, "jobA") == [(0, 1)]
+    director.poll()                   # g1 deep, but jobA is cooling down
+    director.poll()
+    assert sheds_of(director, "jobA") == [(0, 1)]
+    assert director.job_state("jobA").group_id == 1
+    # past the cooldown the pressure valve reopens
+    clock.advance(61.0)
+    director.poll()
+    sheds = sheds_of(director, "jobA")
+    assert len(sheds) == 2 and sheds[1][0] == 1
+    assert director.job_state("jobA").group_id == sheds[1][1]
 
 
 def test_adopt_warm_releases_previous_reservation():

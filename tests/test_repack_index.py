@@ -1,0 +1,276 @@
+"""Tests for the period-boundary interference fix and the incremental
+repack planner (ISSUE 7).
+
+- ``phase_interference`` regressions: a segment crossing the cycle edge
+  must contribute its wrapped tail (the old code clipped it away), the
+  score must be invariant under cyclic rotation of origin/shift, and the
+  mixed-period fold onto the RESIDENT's circle must be invariant under
+  whole-resident-period rotations of the candidate.
+- ``RepackIndex``: dirty tracking, oracle agreement in exact mode
+  (bit-identical decisions vs ``plan_repack`` on an all-dirty state),
+  and bounded-gain soundness of pruned/capped plans (every emitted move,
+  replayed in plan order onto the live state, realizes its claimed gain
+  and clears the floor) under randomized add/remove/drift/repack
+  sequences.
+"""
+import itertools
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+import pytest
+
+from repro.core.scheduler.intervals import IntervalSet
+from repro.core.scheduler.placement import (JobTrace, NodeGroup, Placed,
+                                            PlacementConfig, PlacementPolicy,
+                                            phase_interference, wrapped_arcs)
+from repro.core.scheduler.repack_index import RepackIndex, union_busy
+from test_repack_property import _check_invariants, _random_trace
+
+HORIZON = 400.0
+
+
+def _group_with(residents, horizon=HORIZON):
+    g = NodeGroup(0, 1, IntervalSet([(0.0, horizon)]))
+    for i, (trace, shift) in enumerate(residents):
+        g.resident.append(Placed(f"r{i}", trace, 0, shift))
+    return g
+
+
+# ---------------------------------------------- period-boundary regression
+def test_interference_wraps_at_period_boundary():
+    """A resident active over [7, 9) on an 8s cycle is busy [7,8) AND
+    [0,1) of every period — a candidate active [0, 1) fully collides with
+    the wrapped tail. The pre-fix code clipped the overlap to the linear
+    span [7, 9) and scored 0.0 (it fails on this exact assertion)."""
+    g = _group_with([(JobTrace(8.0, ((7.0, 2.0),)), 0.0)])
+    cand = JobTrace(8.0, ((0.0, 1.0),))
+    assert phase_interference(cand, 0.0, g) == pytest.approx(1.0)
+    # symmetric case: the CANDIDATE's shifted segment wraps instead
+    g2 = _group_with([(JobTrace(8.0, ((0.0, 1.0),)), 0.0)])
+    cand2 = JobTrace(8.0, ((7.0, 2.0),))
+    assert phase_interference(cand2, 0.0, g2) == pytest.approx(1.0)
+
+
+def test_interference_rotation_counterexample():
+    """Deterministic witness of the old bias: resident busy [0,3) and a
+    candidate busy [2,4) on an 8s cycle overlap for 1s; rotating BOTH by
+    +6 (a relabeling of the cycle origin) must not change that. The old
+    code scored the rotated pair 0.0."""
+    cand = JobTrace(8.0, ((0.0, 2.0),))
+    base = phase_interference(
+        cand, 2.0, _group_with([(JobTrace(8.0, ((0.0, 3.0),)), 0.0)]))
+    rotated = phase_interference(
+        cand, 8.0, _group_with([(JobTrace(8.0, ((0.0, 3.0),)), 6.0)]))
+    assert base == pytest.approx(1.0)
+    assert rotated == pytest.approx(base)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_interference_invariant_under_cyclic_rotation(data):
+    """Same-period ensemble: rotating every anchor (residents' shifts and
+    the candidate's shift) by an arbitrary theta — including theta that
+    pushes segments across the period boundary — is a relabeling of the
+    cycle origin and must leave the interference score unchanged."""
+    period = data.draw(st.floats(6.0, 24.0))
+    n_res = data.draw(st.integers(1, 3))
+    residents = []
+    for _ in range(n_res):
+        a = data.draw(st.floats(0.0, period))
+        d = data.draw(st.floats(0.5, period * 0.8))
+        shift = data.draw(st.floats(0.0, period))
+        residents.append((JobTrace(period, ((a, d),)), shift))
+    g = _group_with(residents)
+    ca = data.draw(st.floats(0.0, period))
+    cd = data.draw(st.floats(0.5, period * 0.8))
+    cand = JobTrace(period, ((ca, cd),))
+    shift0 = data.draw(st.floats(0.0, period))
+    base = phase_interference(cand, shift0, g)
+    theta = data.draw(st.floats(0.0, 3.0 * period))
+    g_rot = _group_with([(t, s + theta) for t, s in residents])
+    assert phase_interference(cand, shift0 + theta, g_rot) == \
+        pytest.approx(base, abs=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_interference_mixed_period_resident_circle(data):
+    """Mixed periods fold the candidate onto the RESIDENT's circle: the
+    audit of that approximation is that shifting the candidate by a whole
+    resident period (any multiple) must not change the score, regardless
+    of the candidate's own period."""
+    rp = data.draw(st.floats(6.0, 20.0))
+    g = _group_with([(JobTrace(rp, ((data.draw(st.floats(0.0, rp)),
+                                     data.draw(st.floats(0.5, rp * 0.8))),)),
+                      data.draw(st.floats(0.0, rp)))])
+    cand = _random_trace(data)
+    shift = data.draw(st.floats(0.0, cand.period))
+    base = phase_interference(cand, shift, g)
+    k = data.draw(st.integers(1, 4))
+    assert phase_interference(cand, shift + k * rp, g) == \
+        pytest.approx(base, abs=1e-6)
+
+
+def test_interference_scale_multiplies():
+    g = _group_with([(JobTrace(8.0, ((0.0, 3.0),)), 0.0)])
+    cand = JobTrace(8.0, ((0.0, 2.0),))
+    base = phase_interference(cand, 2.0, g)
+    g.interference_scale = 1.5
+    assert phase_interference(cand, 2.0, g) == pytest.approx(1.5 * base)
+
+
+def test_wrapped_arcs_and_union_busy():
+    assert wrapped_arcs(7.0, 2.0, 8.0) == ((7.0, 8.0), (0.0, 1.0))
+    assert wrapped_arcs(2.0, 3.0, 8.0) == ((2.0, 5.0),)
+    assert wrapped_arcs(1.0, 9.0, 8.0) == ((0.0, 8.0),)   # covers the circle
+    # union measure is rotation-invariant (the pigeonhole bound relies on it)
+    segs = ((0.0, 2.0), (5.0, 4.0))
+    assert union_busy(segs, 0.0, 8.0) == pytest.approx(
+        union_busy(segs, 3.3, 8.0))
+
+
+# ----------------------------------------------------------- dirty tracking
+def _fresh_policy(n_groups=3, horizon=HORIZON):
+    return PlacementPolicy(
+        [NodeGroup(g, 1, IntervalSet([(0.0, horizon)]))
+         for g in range(n_groups)],
+        PlacementConfig(horizon=horizon))
+
+
+def test_index_dirty_tracking_and_convergence():
+    pol = _fresh_policy(3)
+    idx = RepackIndex(pol)
+    pol.place_warm("a", JobTrace(8.0, ((6.0, 2.0),)), origin=0.0)
+    pol.place_warm("b", JobTrace(8.0, ((1.0, 3.0),)), origin=0.0)
+    assert idx.dirty_groups() != []
+    idx.plan(origin=0.0)
+    # planned-against groups are clean: the next pass has no candidates
+    assert idx.dirty_groups() == []
+    plan = idx.plan(origin=0.0)
+    assert idx.last_stats["candidates"] == 0
+    assert not plan.moves and not plan.reshifts
+    # a resident change re-dirties exactly the touched group
+    pol.place_warm("c", JobTrace(10.0, ((5.0, 2.0),)), origin=0.0)
+    touched = pol.placed["c"].group_id
+    assert idx.dirty_groups() == [touched]
+    # drift marking forces a clean group back in
+    other = next(g.group_id for g in pol.groups if g.group_id != touched)
+    idx.mark_dirty(other)
+    assert sorted(idx.dirty_groups()) == sorted({touched, other})
+
+
+def test_incremental_plan_does_not_mutate_live_state():
+    pol = _fresh_policy(3)
+    for i, (p, a, d) in enumerate([(8.0, 6.0, 2.0), (8.0, 1.0, 3.0),
+                                   (12.0, 4.0, 5.0), (10.0, 2.0, 4.0)]):
+        pol.place_warm(f"j{i}", JobTrace(p, ((a, d),)), origin=0.0)
+    snap_placed = {j: (p.group_id, p.shift, p.origin)
+                   for j, p in pol.placed.items()}
+    snap_free = {g.group_id: g.free.intervals() for g in pol.groups}
+    RepackIndex(pol).plan(origin=0.0, min_gain=0.001)
+    assert {j: (p.group_id, p.shift, p.origin)
+            for j, p in pol.placed.items()} == snap_placed
+    assert {g.group_id: g.free.intervals()
+            for g in pol.groups} == snap_free
+
+
+# -------------------------------------------------- oracle agreement
+def _plan_sig(plan):
+    return ([(m.job_id, m.src_group, m.dst_group, m.shift, m.vacates)
+             for m in plan.moves], list(plan.reshifts))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_incremental_plan_matches_oracle_exact_mode(data):
+    """On an all-dirty state with no floor, no destination cap and no
+    pruning, the index's decisions must be BIT-IDENTICAL to the full
+    planner's: same moves (job, src, dst, shift, vacates flag) in the
+    same order, same reshift set."""
+    n_groups = data.draw(st.integers(2, 4))
+    pol = _fresh_policy(n_groups)
+    counter = itertools.count()
+    alive = []
+    now = 0.0
+    for _ in range(data.draw(st.integers(4, 14))):
+        op = data.draw(st.sampled_from(["add", "add", "add", "remove",
+                                        "advance"]))
+        if op == "add":
+            job = f"j{next(counter)}"
+            if pol.place_warm(job, _random_trace(data),
+                              origin=now) is not None:
+                alive.append(job)
+        elif op == "remove" and alive:
+            pol.remove(alive.pop(data.draw(st.integers(0, len(alive) - 1))))
+        elif op == "advance":
+            now += data.draw(st.floats(0.0, 20.0))
+            for g in pol.groups:
+                g.advance_to(now)
+                g.extend_to(now + HORIZON)
+    oracle = pol.plan_repack(origin=now, min_gain=0.0)
+    inc = RepackIndex(pol).plan(origin=now, min_gain=0.0,
+                                max_dest_search=None, prune_dests=False)
+    assert _plan_sig(inc) == _plan_sig(oracle)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_incremental_apply_sound_gains_and_invariants(data):
+    """Randomized add/remove/drift/plan/apply sequences through the index
+    with pruning and destination caps ON: every emitted cross-group move
+    must clear the migration-cost floor (or vacate its source), its
+    claimed gain must be realized when the deltas are replayed in plan
+    order onto the live state, and the placement invariants (single
+    reservation, no cycle-0 double-booking, reserved∩free empty) must
+    hold after every apply."""
+    floor = 0.001
+    n_groups = data.draw(st.integers(2, 4))
+    pol = _fresh_policy(n_groups)
+    idx = RepackIndex(pol)
+    counter = itertools.count()
+    alive = []
+    now = 0.0
+    for _ in range(data.draw(st.integers(6, 20))):
+        op = data.draw(st.sampled_from(
+            ["add", "add", "add", "remove", "advance", "drift", "plan"]))
+        if op == "add":
+            job = f"j{next(counter)}"
+            if pol.place_warm(job, _random_trace(data),
+                              origin=now) is not None:
+                alive.append(job)
+        elif op == "remove" and alive:
+            pol.remove(alive.pop(data.draw(st.integers(0, len(alive) - 1))))
+        elif op == "advance":
+            now += data.draw(st.floats(0.0, 20.0))
+            for g in pol.groups:
+                g.advance_to(now)
+                g.extend_to(now + HORIZON)
+        elif op == "drift" and pol.groups:
+            gids = sorted(g.group_id for g in pol.groups)
+            idx.mark_dirty(gids[data.draw(st.integers(0, len(gids) - 1))])
+        elif op == "plan":
+            cap = data.draw(st.sampled_from([None, 1, 3]))
+            plan = idx.plan(origin=now, min_gain=floor,
+                            max_dest_search=cap)
+            for m in plan.moves:
+                assert m.vacates or m.gain >= floor
+            # replay deltas exactly like apply_repack and pin each claimed
+            # gain against the live state at its decision point
+            for m in plan.deltas:
+                cur = pol.placed.get(m.job_id)
+                assert cur is not None and cur.group_id == m.src_group
+                before = phase_interference(
+                    cur.trace, cur.shift, pol.group(cur.group_id),
+                    cur.origin, exclude=m.job_id)
+                pol.remove(m.job_id)
+                pol.place_at(m.job_id, cur.trace, m.dst_group, m.shift,
+                             origin=m.origin, n_cycles=m.n_cycles)
+                if m.src_group != m.dst_group:
+                    after = phase_interference(
+                        cur.trace, m.shift, pol.group(m.dst_group),
+                        m.origin, exclude=m.job_id)
+                    assert before - after == pytest.approx(m.gain, abs=1e-6)
+        _check_invariants(pol, alive)
