@@ -139,19 +139,25 @@ def _time_us(fn, iters=200, repeats=4) -> float:
 
 
 def _admission_us(n_queued: int, n_jobs: int, use_index: bool,
-                  seed: int = 0) -> float:
+                  seed: int = 0, mixed_priority: bool = False) -> float:
     """Per-admission cost of ``n_queued`` ops through the executor's
     submit + pick/start/finish cycle on one group: the dispatch plane's hot
     path. Submissions are INSIDE the timed region so the indexed path is
-    charged for its O(log n) insert maintenance, not just the pick."""
+    charged for its O(log n) insert maintenance, not just the pick.
+    ``mixed_priority`` assigns each job a distinct tenant priority weight,
+    exercising the kinetic tournament's extra crossing class — the flat-cost
+    claim must survive the multi-tenant score term."""
     clock = VirtualClock()
     ex = TaskExecutor(now=clock, policy="hrrs",
                       use_admission_index=use_index)
     rng = np.random.default_rng(seed)
+    prio_of = {f"job{j}": (0.5, 1.0, 2.0, 4.0)[j % 4]
+               for j in range(n_jobs)} if mixed_priority else {}
     reqs = [hrrs.Request(req_id=i + 1, job_id=f"job{i % n_jobs}",
                          op="update_actor",
                          exec_time=float(rng.uniform(0.5, 8.0)),
-                         arrival_time=0.0)
+                         arrival_time=0.0,
+                         priority=prio_of.get(f"job{i % n_jobs}", 1.0))
             for i in range(n_queued)]
     gaps = [float(rng.uniform(0.0, 0.2)) for _ in range(n_queued)]
     admitted = 0
@@ -343,6 +349,16 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("admission/indexed_n4096_us",
                  _admission_us(4096, n_jobs=4, use_index=True),
                  "full re-score omitted at this depth"))
+    # multi-tenant priority term: a mixed-priority pool (weights 0.5/1/2/4
+    # across the job buckets) exercises the tournament's extra flat-level
+    # crossing class; indexed admission must stay flat with the term on
+    for n in (256, 1024):
+        pf = _admission_us(n, n_jobs=4, use_index=False, mixed_priority=True)
+        pi = _admission_us(n, n_jobs=4, use_index=True, mixed_priority=True)
+        rows.append((f"admission/priority_full_n{n}_us", pf,
+                     "mixed-priority pool, full re-score"))
+        rows.append((f"admission/priority_indexed_n{n}_us", pi,
+                     f"speedup={pf / max(pi, 1e-9):.1f}x"))
 
     # control plane: placement decision latency vs resident-job count, and
     # the wall-clock of a realized repack migration (8 MiB managed state)

@@ -1,38 +1,60 @@
-"""CI perf smoke: one steady-state incremental repack planning pass must
-stay cheap at fleet scale.
+"""CI perf smoke: two hot-path costs must stay cheap at fleet scale.
 
-The ceiling is deliberately generous (CI runners are slow and noisy —
-locally the n=256 pass runs ~2 ms): this guards against the O(fleet)
-regression class, e.g. someone re-introducing a full policy clone or a
-per-pass re-fit of every job into the ``RepackIndex`` path, not against
-constant-factor drift. Wired as a warn-only (``continue-on-error``) CI
-step so a slow runner can never block a merge.
+1. One steady-state incremental repack planning pass (``RepackIndex.plan``)
+   against a synthetic fleet — guards the O(fleet) regression class, e.g.
+   someone re-introducing a full policy clone or a per-pass re-fit of every
+   job.
+2. Per-admission cost through the indexed dispatch path with the
+   multi-tenant priority term enabled (mixed-priority pool) — guards the
+   flat-cost claim of the kinetic tournament: the tenant term adds one
+   crossing class, not an O(n) re-score.
 
-    PYTHONPATH=src python -m benchmarks.perf_smoke [--n 256] [--ceiling-ms 20]
+The ceilings are deliberately generous (CI runners are slow and noisy —
+locally the n=256 repack pass runs ~2 ms and a priority-term admission
+~20 us): they catch complexity-class regressions, not constant-factor
+drift. Wired as a warn-only (``continue-on-error``) CI step so a slow
+runner can never block a merge.
 
-Exit code 1 when the measured pass exceeds the ceiling.
+    PYTHONPATH=src python -m benchmarks.perf_smoke \
+        [--n 256] [--ceiling-ms 20] [--admission-ceiling-us 300]
+
+Exit code 1 when any measured cost exceeds its ceiling.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
-from benchmarks.hrrs_bench import _repack_plan_inc_us
+from benchmarks.hrrs_bench import _admission_us, _repack_plan_inc_us
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=256,
-                    help="resident jobs in the synthetic fleet")
+                    help="resident jobs / queued ops in the synthetic fleet")
     ap.add_argument("--ceiling-ms", type=float, default=20.0,
-                    help="warn threshold for one planning pass")
+                    help="warn threshold for one repack planning pass")
+    ap.add_argument("--admission-ceiling-us", type=float, default=300.0,
+                    help="warn threshold for one indexed admission with the "
+                         "tenant priority term enabled")
     args = ap.parse_args(argv)
+    ok = True
+
     us = _repack_plan_inc_us(args.n, iters=20)
     ms = us / 1000.0
     verdict = "OK" if ms <= args.ceiling_ms else "SLOW"
+    ok = ok and ms <= args.ceiling_ms
     print(f"perf-smoke: repack_plan_inc n={args.n}: {ms:.2f} ms "
           f"(ceiling {args.ceiling_ms:.0f} ms) {verdict}")
-    return 0 if ms <= args.ceiling_ms else 1
+
+    adm_us = _admission_us(args.n, n_jobs=4, use_index=True,
+                           mixed_priority=True)
+    verdict = "OK" if adm_us <= args.admission_ceiling_us else "SLOW"
+    ok = ok and adm_us <= args.admission_ceiling_us
+    print(f"perf-smoke: priority_admission_indexed n={args.n}: "
+          f"{adm_us:.1f} us (ceiling {args.admission_ceiling_us:.0f} us) "
+          f"{verdict}")
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

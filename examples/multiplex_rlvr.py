@@ -45,13 +45,22 @@ grown cycle no longer coexists with its neighbour — spawns a group and
 live-migrates, with the whole detect -> re-profile -> repack -> migrate
 sequence in the director's decision log.
 
+Part 6 (multi-tenant service layer): the plane serves two TENANTS — a
+GUARANTEED "prod" tenant with an SLO and a BEST_EFFORT "lab" tenant with a
+1-job group quota. A second lab submission is admission-QUEUED at quota
+(typed denial, not a stack trace), the operator TIGHTENS prod's SLO
+mid-serve (re-registering the spec), the next folded steps breach the
+rolling p95 and the director's fourth trigger preempts/holds the
+best-effort job, and detaching the first lab job drains the queued one in.
+Decision log and per-tenant accounting print at the end.
+
 Run:  PYTHONPATH=src python examples/multiplex_rlvr.py
 """
 import time
 
 import numpy as np
 
-from repro.core import api
+from repro.core import api, tenancy
 from repro.core.cluster import PlexCluster
 from repro.core.control_plane import DirectorConfig, PlacementDirector
 from repro.core.controller import JobConfig
@@ -171,6 +180,79 @@ def part5_drift_reconciliation():
               f"period={a.trace.period:.1f}s (plan v{plan.version})")
 
 
+def part6_multi_tenant_service():
+    """Two tenants against one live plane: quota-queued admission, an SLO
+    tightened mid-serve, and the director's SLO-guarded preemption trigger
+    defending the guaranteed tenant — decision log printed."""
+    cluster = PlexCluster(
+        n_groups=1,
+        # cooldown off: the consolidation migrate would otherwise pin the
+        # best-effort job against preemption for 30s of this short demo
+        director_cfg=DirectorConfig(warmup_cycles=0, max_groups=3,
+                                    repack_interval_s=1e9,
+                                    migration_cooldown_s=0.0,
+                                    slo_window=6, slo_min_samples=3))
+    # prod: GUARANTEED with a deliberately loose SLO for now (tightened
+    # live below); lab: BEST_EFFORT, low priority, at most ONE job admitted
+    cluster.register_tenant(tenancy.TenantSpec(
+        "prod", priority=4.0, class_=tenancy.TenantClass.GUARANTEED,
+        slo_step_latency_s=1e9))
+    cluster.register_tenant(tenancy.TenantSpec(
+        "lab", priority=0.5, quota_groups=1))
+
+    def tenant_job(job_id, tenant, steps, seed):
+        return JobConfig(job_id=job_id, model_name="qwen2-0.5b",
+                         steps=steps, batch_size=8, group_size=4,
+                         max_new_tokens=6, seq_len=32, overrides=TINY,
+                         seed=seed, tenant=tenant)
+
+    with cluster.serve():
+        cluster.add_job(tenant_job("prod-1", "prod", 10, 1), group_id=None)
+        cluster.add_job(tenant_job("lab-1", "lab", 60, 2), group_id=None)
+        # the greedy tenant tries to attach a SECOND job: at quota it is
+        # a typed denial, and with queue_on_deny it parks instead
+        try:
+            cluster.add_job(tenant_job("lab-2", "lab", 2, 3), group_id=None)
+        except tenancy.AdmissionDenied as denied:
+            print(f"lab-2 denied: {denied}")
+        cluster.add_job(tenant_job("lab-2", "lab", 2, 3), group_id=None,
+                        queue_on_deny=True)
+        depth = cluster.router.tenant_telemetry()["lab"]["pending_jobs"]
+        print(f"lab-2 admission-queued (lab pending depth: {depth})")
+        # wait until prod's rolling p95 is meaningful, then TIGHTEN the
+        # SLO below it: the next folded steps breach and trigger 4 fires
+        wait_until(cluster, lambda: cluster.tenant_ledger.snapshot()
+                   .get("prod", {}).get("step_p95_s") is not None)
+        p95 = cluster.tenant_ledger.snapshot()["prod"]["step_p95_s"]
+        cluster.register_tenant(tenancy.TenantSpec(
+            "prod", priority=4.0, class_=tenancy.TenantClass.GUARANTEED,
+            slo_step_latency_s=p95 / 2))
+        print(f"prod SLO tightened mid-serve: {p95:.2f}s p95 -> "
+              f"{p95 / 2:.2f}s objective")
+        wait_until(cluster, lambda: any(
+            e["event"] in ("slo_preempt", "slo_hold")
+            for e in cluster.director.events))
+        # the first lab job leaves: its quota frees and the QUEUED lab-2
+        # is admitted automatically by the drain
+        cluster.remove_job("lab-1")
+        wait_until(cluster, lambda: "lab-2" in cluster.controllers)
+        print("lab-1 detached -> queued lab-2 admitted "
+              f"(lab active: {cluster.admission.active_count('lab')})")
+    print("tenancy decision log:")
+    for e in cluster.director.events:
+        if e["event"].startswith("slo_") or e["event"] == "spawn_group":
+            print("  ", {k: (round(v, 3) if isinstance(v, float) else v)
+                         for k, v in e.items()})
+    print("per-tenant accounting (Router.tenant_telemetry):")
+    for tenant, tel in sorted(cluster.router.tenant_telemetry().items()):
+        att = tel.get("slo_attainment")
+        print(f"  {tenant}: jobs={tel['jobs']} "
+              f"gpu_s={tel.get('gpu_seconds', 0.0):.1f} "
+              f"steps={tel.get('steps_total', 0)} "
+              f"slo_attainment={att if att is None else round(att, 3)} "
+              f"p95={tel.get('step_p95_s')}")
+
+
 def main():
     print("=== Part 1: one shared group (HRRS multiplexing) ===")
     print("--- isolated (back-to-back) ---")
@@ -262,6 +344,10 @@ def main():
     print("\n=== Part 5: continuous reconciliation (drift -> re-profile -> "
           "repack -> migrate) ===")
     part5_drift_reconciliation()
+
+    print("\n=== Part 6: multi-tenant service layer (quotas, SLO-guarded "
+          "preemption) ===")
+    part6_multi_tenant_service()
 
     print("\nNOTE: on one CPU every op is compute-bound and XLA already"
           "\nsaturates all cores, so neither HRRS (Part 1) nor cross-group"

@@ -23,6 +23,7 @@ import threading
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import api
+from repro.core import tenancy
 from repro.core.control_plane import DirectorConfig, PlacementDirector
 from repro.core.controller import (JobConfig, RLControllerGRPO,
                                    RLControllerPPO, _RLControllerBase)
@@ -72,14 +73,34 @@ class PlexCluster:
             # router's device plane (disjoint hardware per group when the
             # process has enough devices; shared lone slice otherwise)
             self.router.ensure_group(g)
+        # multi-tenant service layer: registry (who exists), ledger
+        # (per-tenant accounting + SLO windows), admission controller
+        # (quotas + pending queues). The default tenant is implicit, so an
+        # untenanted cluster behaves exactly as before.
+        dcfg = director_cfg or DirectorConfig()
+        self.tenants = tenancy.TenantRegistry()
+        self.tenant_ledger = tenancy.TenantLedger(
+            self.tenants, slo_window=dcfg.slo_window,
+            slo_min_samples=dcfg.slo_min_samples)
+        self.admission = tenancy.AdmissionController(self.tenants,
+                                                     self.tenant_ledger)
+        self.router.tenant_ledger = self.tenant_ledger
         # the live control plane: online profiler + automatic placement +
-        # capacity adjustment over this router's node groups
+        # capacity adjustment over this router's node groups (tenancy gives
+        # it the SLO-preemption trigger's inputs)
         self.director = PlacementDirector(self.router, cfg=director_cfg,
-                                          initial_groups=range(n_groups))
+                                          initial_groups=range(n_groups),
+                                          tenancy=self.tenant_ledger)
 
     # ------------------------------------------------------------- jobs
+    def register_tenant(self, spec: tenancy.TenantSpec) -> tenancy.TenantSpec:
+        """Register (or replace — how an operator tightens a live SLO) a
+        tenant's policy. Jobs name their tenant via ``JobConfig.tenant``."""
+        return self.tenants.register(spec)
+
     def add_job(self, cfg: JobConfig, group_id: Optional[int] = 0,
-                algo: str = "grpo") -> _RLControllerBase:
+                algo: str = "grpo",
+                queue_on_deny: bool = False) -> Optional[_RLControllerBase]:
         """Attach a job. Outside serve mode it is registered for the next
         :meth:`run`; against a live :meth:`serve` plane it starts making
         progress immediately on its own client thread (spawning a dispatch
@@ -89,7 +110,38 @@ class PlexCluster:
         :class:`~repro.core.control_plane.PlacementDirector` cold-places the
         job on a dedicated profiling group (spawning one if needed), then —
         after one clean profiled cycle — re-fits it by micro-shift trace
-        fitting and migrates it onto a shared group automatically."""
+        fitting and migrates it onto a shared group automatically.
+
+        Every submission passes tenancy admission first: a job whose tenant
+        is at quota (groups or gpu-seconds) or for which no feasible
+        placement exists is rejected with a typed
+        :class:`~repro.core.tenancy.AdmissionDenied` — or, with
+        ``queue_on_deny=True``, parked in its tenant's pending queue
+        (returns None) and replayed automatically when :meth:`remove_job`
+        frees capacity. Unknown tenants are always a hard denial."""
+        tenant_id = getattr(cfg, "tenant", tenancy.DEFAULT_TENANT)
+        reason = self.admission.check(
+            tenant_id, cfg.job_id, self.director.placement_feasible())
+        if reason is not None:
+            if queue_on_deny and reason != tenancy.REASON_UNKNOWN_TENANT:
+                self.admission.enqueue(tenant_id, tenancy.PendingJob(
+                    cfg=cfg, group_id=group_id, algo=algo,
+                    enqueued_t=self.router.now()))
+                return None
+            raise tenancy.AdmissionDenied(tenant_id, cfg.job_id, reason)
+        self.admission.admit(tenant_id, cfg.job_id)
+        return self._launch_admitted(cfg, group_id, algo)
+
+    def _launch_admitted(self, cfg: JobConfig, group_id: Optional[int],
+                         algo: str) -> _RLControllerBase:
+        """Attach a job whose admission is already decided (quota
+        reserved): bind its tenant, stamp its HRRS priority, place, and
+        launch. Shared by :meth:`add_job` and the pending-queue drain."""
+        tenant_id = getattr(cfg, "tenant", tenancy.DEFAULT_TENANT)
+        spec = self.tenants.get(tenant_id) or tenancy.default_spec()
+        self.tenant_ledger.bind_job(cfg.job_id, tenant_id)
+        self.router.register_job_tenant(cfg.job_id, tenant_id,
+                                        priority=spec.priority)
         if group_id is None:
             group_id = self.director.assign(cfg.job_id)
         ctl = CONTROLLER_TYPES[algo](cfg, self.router, group_id=group_id)
@@ -141,6 +193,13 @@ class PlexCluster:
         # control plane: release the job's placement and retire any group
         # the departure left idle (no-op for jobs it never managed)
         self.director.on_job_removed(job_id)
+        # tenancy: drop the quota reservation (after billing, so the final
+        # gpu-seconds land on the right tenant), then replay any pending
+        # submissions the freed capacity now admits
+        self.admission.release(job_id)
+        self.tenant_ledger.unbind_job(job_id)
+        for pending in self.admission.drain(self.director.placement_feasible):
+            self._launch_admitted(pending.cfg, pending.group_id, pending.algo)
         return self.controllers.get(job_id)
 
     # ------------------------------------------------------------ serve
@@ -328,11 +387,20 @@ class PlexCluster:
                 new = log[start:]
                 cursor = start + len(new)
             self._billed_ops[dep_id] = cursor
-            rec.busy_seconds += sum(dt for _, dt in new)
+            busy = sum(dt for _, dt in new)
+            rec.busy_seconds += busy
+            # tenant fold of the same cursors: billing and quota read one
+            # meter (a preempted job's RUNNING op completes, logs, and is
+            # billed here like any other — preemption never strands charges)
+            self.tenant_ledger.add_gpu_seconds(
+                self.tenant_ledger.tenant_of(wpg.spec.job_id), busy)
         for ev in self.router.switch_log[self._billed_switches:]:
             rec = self.billing.get(ev["to_job"])
             if rec is not None:
                 rec.switch_seconds += ev["t_offload"] + ev["t_load"]
+                self.tenant_ledger.add_gpu_seconds(
+                    self.tenant_ledger.tenant_of(ev["to_job"]),
+                    ev["t_offload"] + ev["t_load"])
         self._billed_switches = len(self.router.switch_log)
 
     # --------------------------------------------------- fault tolerance

@@ -18,13 +18,17 @@ one-shot decision at cold→warm promotion.
   dedicated profiling group (``place_cold``); after ``cold_cycles`` clean
   cycles it is re-fitted with ``place_warm`` micro-shift search
   (pack-first) and, if the fit lands elsewhere, migrated live.
-- **Reconciliation** (:mod:`repro.core.control_plane.reconcile`). Three
+- **Reconciliation** (:mod:`repro.core.control_plane.reconcile`). Four
   standing triggers keep the realized schedule converged on the
   :class:`~repro.core.control_plane.plan.ClusterPlan`: periodic
   realized-vs-planned occupancy drift plans an incremental repack
   (migration-cost floor respected), per-job phase drift re-profiles and
-  re-fits a diverged job, and queue pressure sheds the worst-interfering
-  job off a deep-queued group. Repack planning goes through the
+  re-fits a diverged job, queue pressure sheds the worst-interfering
+  job off a deep-queued group, and a GUARANTEED tenant's SLO breach
+  (rolling p95 step latency, folded per tenant from the PhaseRecord
+  stream) preempts the most-interfering BEST_EFFORT job on its group —
+  shed elsewhere when a placement exists, else admission-held for a
+  bounded ``slo_hold_s`` window. Repack planning goes through the
   :class:`~repro.core.scheduler.repack_index.RepackIndex` (dirty groups
   only — flat cost at fleet scale; ``plan_repack`` stays the oracle), and
   a per-job migration cooldown (``migration_cooldown_s``) pins recently
@@ -56,7 +60,7 @@ from repro.core.scheduler.executor import TaskExecutor  # noqa: F401 (docs)
 from repro.core.scheduler.intervals import IntervalSet
 from repro.core.scheduler.placement import (JobMove, JobTrace, NodeGroup,
                                             Placed, PlacementConfig,
-                                            PlacementPolicy)
+                                            PlacementPolicy, group_duty)
 
 
 @dataclasses.dataclass
@@ -69,6 +73,10 @@ class _JobState:
     open_cycle: Dict[str, float] = dataclasses.field(default_factory=dict)
     cycles: List[Dict[str, float]] = dataclasses.field(default_factory=list)
     trace: Optional[JobTrace] = None
+    # wall-clock bounds of the open cycle (for the per-tenant step-latency
+    # fold): first record's start, last record's end
+    open_cycle_t0: Optional[float] = None
+    last_rec_end: float = 0.0
 
 
 class PlacementDirector:
@@ -81,9 +89,18 @@ class PlacementDirector:
     drain — runs OUTSIDE the lock."""
 
     def __init__(self, router, cfg: Optional[DirectorConfig] = None,
-                 initial_groups: Sequence[int] = ()):
+                 initial_groups: Sequence[int] = (), tenancy=None):
         self.router = router
         self.cfg = cfg or DirectorConfig()
+        # multi-tenant service layer: a TenantLedger (or None on untenanted
+        # planes). Supplies the SLO trigger's inputs — per-tenant rolling
+        # step-latency windows (fed back by _fold) and class lookups.
+        self.tenancy = tenancy
+        # jobs admission-held by the SLO trigger because no placement could
+        # absorb them: job_id -> (hold time, guard job whose SLO they broke)
+        self._slo_holds: Dict[str, tuple] = {}
+        # jobs currently observed in breach (edge-triggered logging)
+        self._slo_breached: set = set()
         pcfg = self.cfg.placement or PlacementConfig(horizon=self.cfg.horizon)
         self.policy = PlacementPolicy([], pcfg)
         self.reconciler = Reconciler(self.policy, self.cfg)
@@ -271,13 +288,14 @@ class PlacementDirector:
                 continue
             if (phase == "rollout" and "rollout" in js.open_cycle
                     and "update_actor" in js.open_cycle):
-                js.cycles.append(js.open_cycle)   # next cycle's rollout
-                js.open_cycle = {}
+                self._close_cycle(js)             # next cycle's rollout
+            if not js.open_cycle:
+                js.open_cycle_t0 = r.t_started
             js.open_cycle[phase] = js.open_cycle.get(phase, 0.0) + r.duration
+            js.last_rec_end = r.t_finished
         # a completed step means the open cycle (if whole) is closed
         if "rollout" in js.open_cycle and "update_actor" in js.open_cycle:
-            js.cycles.append(js.open_cycle)
-            js.open_cycle = {}
+            self._close_cycle(js)
         # bounded history for EVERY job: promotion reads the first
         # warmup+cold cycles and drift re-profiling the rolling tail, so
         # nothing needs more than this window — in particular a job stuck
@@ -287,6 +305,19 @@ class PlacementDirector:
                 + max(8, self.cfg.drift_window))
         if len(js.cycles) > keep:
             del js.cycles[:len(js.cycles) - keep]
+
+    def _close_cycle(self, js: _JobState):
+        """Close the open profiling cycle; its WALL time (first record start
+        to last record end — queueing and interference included, which is
+        exactly what a tenant experiences) feeds the per-tenant step-latency
+        window the SLO trigger reads."""
+        js.cycles.append(js.open_cycle)
+        js.open_cycle = {}
+        if self.tenancy is not None and js.open_cycle_t0 is not None:
+            wall = js.last_rec_end - js.open_cycle_t0
+            if wall > 0.0:
+                self.tenancy.record_step(js.job_id, wall)
+        js.open_cycle_t0 = None
 
     # ----------------------------------------------------------- lifecycle
     def on_job_step(self, job_id: str):
@@ -307,6 +338,7 @@ class PlacementDirector:
             now = self.router.now()
             self._advance(now)
             self._fold(js)
+            self._release_slo_holds(now)
             if js.job_id in self._migrating:
                 pass          # another thread is mid-move: defer decisions
             elif (js.phase == "cold"
@@ -317,6 +349,9 @@ class PlacementDirector:
                     moves.append(mv)
             elif js.phase == "warm":
                 mv = self._check_drift(js, now)
+                if mv is not None:
+                    moves.append(mv)
+                mv = self._check_slo(js, now)
                 if mv is not None:
                     moves.append(mv)
             moves += self._reconcile(now)
@@ -383,6 +418,102 @@ class PlacementDirector:
                            src_origin=old.origin if old else now,
                            n_cycles=placed.n_cycles)
         return None
+
+    def _check_slo(self, js: _JobState, now: float) -> Optional[JobMove]:
+        """Trigger 4 (SLO-guarded preemption): the stepping job's tenant is
+        GUARANTEED and its rolling p95 step latency breached its SLO —
+        preempt the most-interfering BEST_EFFORT job on the group. Shed it
+        elsewhere when a placement exists (same hold→drain→migrate
+        machinery as queue-pressure shed); otherwise admission-hold it for
+        a bounded ``slo_hold_s`` window (work-conserving: delayed, never
+        starved). Cooldown pins (``migration_cooldown_s``) apply to victims
+        exactly as to repack moves, so preemption cannot ping-pong."""
+        if self.tenancy is None:
+            return None
+        if not self.tenancy.slo_breach(js.job_id):
+            if js.job_id in self._slo_breached:
+                self._slo_breached.discard(js.job_id)
+                self._log("slo_recovered", job=js.job_id, t=now)
+            return None
+        if js.job_id not in self._slo_breached:
+            self._slo_breached.add(js.job_id)
+            spec = self.tenancy.spec_of_job(js.job_id)
+            self._log("slo_breach", job=js.job_id, group=js.group_id,
+                      tenant=spec.tenant_id,
+                      p95=self.tenancy.step_p95(spec.tenant_id),
+                      slo=spec.slo_step_latency_s, t=now)
+        victim = self.reconciler.pick_preempt(
+            self.policy.group(js.group_id), self.tenancy.is_best_effort,
+            exclude=frozenset(self._migrating) | self._cooled(now)
+            | set(self._slo_holds) | {js.job_id})
+        if victim is None:
+            return None
+        cold = self._cold_groups()
+        others = [x.group_id for x in self.policy.groups
+                  if x.group_id != js.group_id
+                  and x.group_id not in cold]
+        self.policy.remove(victim.job_id)
+        placed = None
+        if others:
+            placed = self.policy.place_warm(victim.job_id, victim.trace,
+                                            origin=now, groups=others,
+                                            pack=True)
+        if placed is None and len(self.policy.groups) < self.cfg.max_groups:
+            spare = self._spawn_group(now, reason=f"slo:{js.job_id}")
+            placed = self.policy.place_warm(victim.job_id, victim.trace,
+                                            origin=now, groups=[spare])
+        if placed is None:
+            # nowhere to move it: restore the reservation and HOLD the
+            # victim's admissions instead. The hold is bounded (slo_hold_s)
+            # and released early if the guard's p95 recovers; the cooldown
+            # stamp keeps the next breach from re-targeting it instantly.
+            self.policy.place_at(victim.job_id, victim.trace, js.group_id,
+                                 victim.shift, origin=victim.origin,
+                                 n_cycles=victim.n_cycles)
+            self.router.executor.hold_job(victim.job_id)
+            self._slo_holds[victim.job_id] = (now, js.job_id)
+            self._last_migrated[victim.job_id] = now
+            self._log("slo_hold", job=victim.job_id, group=js.group_id,
+                      guard=js.job_id, t=now)
+            return None
+        vjs = self._jobs.get(victim.job_id)
+        if vjs is not None:
+            vjs.group_id = placed.group_id
+        self._plan_dirty = True
+        self._log("slo_preempt", job=victim.job_id, src=js.group_id,
+                  dst=placed.group_id, guard=js.job_id, t=now)
+        return JobMove(victim.job_id, js.group_id, placed.group_id,
+                       placed.shift, origin=placed.origin,
+                       src_shift=victim.shift, src_origin=victim.origin,
+                       n_cycles=placed.n_cycles)
+
+    def _release_slo_holds(self, now: float):
+        """Release SLO admission holds whose window elapsed or whose guard
+        job's tenant recovered. Event-driven from step hooks (no timer
+        thread — deterministic under VirtualClock). Call under ``_lock``."""
+        if not self._slo_holds:
+            return
+        for job_id, (t0, guard) in list(self._slo_holds.items()):
+            recovered = (self.tenancy is None
+                         or not self.tenancy.slo_breach(guard))
+            if recovered or now - t0 >= self.cfg.slo_hold_s:
+                del self._slo_holds[job_id]
+                self.router.executor.release_job(job_id)
+                self._log("slo_release", job=job_id, guard=guard,
+                          reason="recovered" if recovered else "timeout",
+                          t=now)
+
+    def placement_feasible(self) -> bool:
+        """Admission-time feasibility for the tenancy layer: can the
+        cluster host one more job WITHOUT unbounded spawning? True while a
+        new group may still be spawned (< max_groups) or any existing group
+        has duty slack left. Conservative by design — it never spawns or
+        reserves anything; the actual placement happens post-admission."""
+        with self._lock:
+            if len(self.policy.groups) < self.cfg.max_groups:
+                return True
+            return any(group_duty(g) < g.nodes * 1.0 - 1e-9
+                       for g in self.policy.groups)
 
     def _reconcile(self, now: float, force: bool = False) -> List[JobMove]:
         """Trigger 1: periodic realized-vs-planned occupancy check; on
@@ -460,6 +591,15 @@ class PlacementDirector:
         with self._lock:
             js = self._jobs.pop(job_id, None)
             self._last_migrated.pop(job_id, None)
+            self._slo_breached.discard(job_id)
+            # a held victim leaving keeps no dangling hold; holds guarded
+            # by the departing job lose their reason and release at once
+            if self._slo_holds.pop(job_id, None) is not None:
+                self.router.executor.release_job(job_id)
+            for held, (_, guard) in list(self._slo_holds.items()):
+                if guard == job_id:
+                    del self._slo_holds[held]
+                    self.router.executor.release_job(held)
             self.policy.remove(job_id)
             self.router.executor.drop_job_telemetry(job_id)
             self._plan_dirty = True

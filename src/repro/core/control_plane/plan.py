@@ -83,6 +83,16 @@ class DirectorConfig:
     #   busy overlap into each group's interference_scale (a group whose
     #   execution keeps landing outside the plan scores pessimistically in
     #   phase_interference until reality re-converges); 0 disables
+    # ---- SLO-guarded preemption (multi-tenant service layer) --------------
+    slo_window: int = 16              # rolling step-latency window per tenant
+    #   (walls folded from the PhaseRecord stream; p95 is nearest-rank over
+    #   this window)
+    slo_min_samples: int = 4          # walls required before the p95 is
+    #   meaningful — the SLO trigger never fires off one noisy sample
+    slo_hold_s: float = 10.0          # when a breaching group has nowhere to
+    #   shed the BEST_EFFORT victim, it is admission-held for this long
+    #   (bounded, so best-effort work stays work-conserving, never starved);
+    #   released early if the guaranteed tenant's p95 recovers
 
 
 def trace_from_cycles(cycles: Sequence[Dict[str, float]],

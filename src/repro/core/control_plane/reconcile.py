@@ -3,7 +3,7 @@ and the :class:`~repro.core.control_plane.plan.ClusterPlan`, and turn it
 into repack / re-profile / shed decisions (paper §4.3.2's "repack when the
 realized schedule diverges from the plan").
 
-Three triggers, all event-driven from job-step hooks (no timer thread, so
+Four triggers, all event-driven from job-step hooks (no timer thread, so
 the whole decision sequence replays bit-identically under a VirtualClock):
 
 1. **Occupancy drift** (periodic, every ``repack_interval_s``): the
@@ -24,6 +24,13 @@ the whole decision sequence replays bit-identically under a VirtualClock):
    more than one warm job sheds its worst-interfering resident onto
    another group (spawning a spare if none fits) instead of merely adding
    idle capacity.
+4. **SLO breach** (multi-tenant service layer): a GUARANTEED tenant whose
+   rolling p95 step latency exceeds its SLO preempts the most-interfering
+   BEST_EFFORT job sharing its group — shed elsewhere when a placement
+   exists, else admission-held for a bounded window (work-conserving:
+   best-effort work is delayed, never starved). Cooldown-aware via the
+   director's ``migration_cooldown_s`` pins, so preemption cannot
+   ping-pong a victim.
 
 The reconciler only *decides*; the director applies decisions to the
 placement state and realizes migrations through ``Router.reassign_jobs``.
@@ -202,6 +209,29 @@ class Reconciler:
             return None
         scored = sorted(
             warm,
+            key=lambda p: (-phase_interference(p.trace, p.shift, group,
+                                               p.origin, exclude=p.job_id),
+                           p.job_id))
+        return scored[0]
+
+    # ----------------------------------------------- trigger 4: SLO breach
+    def pick_preempt(self, group: Optional[NodeGroup], is_best_effort,
+                     exclude=frozenset()) -> Optional[Placed]:
+        """The BEST_EFFORT victim to preempt off a group whose GUARANTEED
+        tenant is breaching its SLO: the most-interfering warm best-effort
+        resident. Unlike :meth:`pick_shed` there is no min-2 requirement —
+        removing the group's only best-effort job is exactly the point.
+        ``is_best_effort(job_id) -> bool`` comes from the tenant ledger;
+        ``exclude`` pins jobs already migrating, cooled, or held."""
+        if group is None:
+            return None
+        victims = [p for p in group.resident
+                   if not p.once and p.job_id not in exclude
+                   and is_best_effort(p.job_id)]
+        if not victims:
+            return None
+        scored = sorted(
+            victims,
             key=lambda p: (-phase_interference(p.trace, p.shift, group,
                                                p.origin, exclude=p.job_id),
                            p.job_id))

@@ -47,6 +47,7 @@ class JobConfig:
     async_staleness: int = 0          # 0 = synchronous; 1 = one-step async
     seed: int = 0
     overrides: tuple = ()
+    tenant: str = "default"           # owning tenant (tenancy.DEFAULT_TENANT)
 
 
 class _RLControllerBase:

@@ -75,6 +75,15 @@ class Router:
         # PlacementDirector to calibrate the migration-cost floor
         self.migrate_log: List[dict] = []
         self.executor = TaskExecutor(now=now, policy=policy)
+        # multi-tenant service layer: per-job tenant binding and HRRS
+        # priority weight (rho). Unregistered jobs default to the implicit
+        # default tenant at priority 1.0 — the multiplicative identity, so
+        # untenanted planes score bit-identically to the pre-tenancy plane.
+        self.job_priority: Dict[str, float] = {}
+        self.job_tenant: Dict[str, str] = {}
+        # set by Cluster when tenancy is wired; tenant_telemetry() merges
+        # its accounting snapshot (gpu-seconds, SLO attainment, pending)
+        self.tenant_ledger = None
         # per-job queued-op table, keyed by req_id for O(1) finalize
         self.request_queues: Dict[str, Dict[int, api.QueuedOperation]] = {}
         self.pending: Dict[int, api.QueuedOperation] = {}
@@ -176,6 +185,8 @@ class Router:
                 if not any(s.job_id == spec.job_id
                            for s in self.deployments.values()):
                     self.request_queues.pop(spec.job_id, None)
+                    self.job_priority.pop(spec.job_id, None)
+                    self.job_tenant.pop(spec.job_id, None)
             if cancelled:
                 # hold the idle guard across the error callbacks below:
                 # finish() already dropped the open count, and a callback
@@ -202,6 +213,17 @@ class Router:
                     ex.cv.notify_all()
 
     # -------------------------------------------------------------- submit
+    def register_job_tenant(self, job_id: str, tenant_id: str,
+                            priority: float = 1.0):
+        """Bind a job to its tenant and HRRS priority weight. Every
+        subsequently submitted operation of the job is scored with the
+        multiplicative ``priority`` term (1.0 = default tenant, exact
+        no-op on the score). Cleared when the job's last deployment
+        detaches."""
+        with self.executor.cv:
+            self.job_tenant[job_id] = tenant_id
+            self.job_priority[job_id] = priority
+
     def submit_queued_operation(self, qop: api.QueuedOperation) -> api.Future:
         """Non-blocking API handler (§5.2.2): wrap + enqueue, return at once.
 
@@ -218,7 +240,9 @@ class Router:
             self.request_queues.setdefault(qop.job_id, {})[qop.req_id] = qop
             req = hrrs.Request(req_id=qop.req_id, job_id=qop.job_id,
                                op=qop.op.value, exec_time=qop.exec_estimate,
-                               arrival_time=qop.arrival_time, payload=qop)
+                               arrival_time=qop.arrival_time, payload=qop,
+                               priority=self.job_priority.get(
+                                   qop.job_id, 1.0))
             group = self.group_of[qop.deployment_id]
             self.executor.submit(req, group,
                                  prerequisites=qop.prerequisites)
@@ -533,15 +557,15 @@ class Router:
         """Operations executed by the current/last serve plane."""
         return sum(c[0] for c in self._serve_executed.values())
 
-    def wait_idle(self, timeout: Optional[float] = None):
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
         """Block until nothing is queued, running, or firing callbacks.
-        Usable from any client thread against a live serve plane."""
+        Usable from any client thread against a live serve plane.
+        Returns True once the plane quiesced, False if ``timeout`` elapsed
+        first (the caller distinguishes quiesced from timed-out)."""
         ex = self.executor
         with ex.cv:
-            ok = ex.cv.wait_for(
+            return ex.cv.wait_for(
                 lambda: ex.outstanding() == 0 and ex.inflight == 0, timeout)
-        if not ok:
-            raise TimeoutError(f"plane not idle within {timeout}s")
 
     # ------------------------------------------- group lifecycle / telemetry
     def known_groups(self) -> List[int]:
@@ -628,6 +652,49 @@ class Router:
                         d for d, gg in self.group_of.items() if gg == g),
                     "worker": g in self._serve_threads,
                 }
+        return out
+
+    def tenant_telemetry(self) -> Dict[str, dict]:
+        """Per-tenant service snapshot alongside :meth:`group_telemetry`.
+
+        Plane-derived keys (always present): queue_depth (QUEUED ops across
+        the tenant's jobs), running (ops currently executing), jobs, groups
+        (distinct node groups hosting the tenant's deployments). When a
+        :class:`~repro.core.tenancy.TenantLedger` is wired (Cluster does),
+        its accounting snapshot is merged in: gpu_seconds, steps_total,
+        slo_attainment, step_p95_s, pending_jobs."""
+        ex = self.executor
+        out: Dict[str, dict] = {}
+
+        def slot(tenant: str) -> dict:
+            return out.setdefault(tenant, {
+                "queue_depth": 0, "running": 0,
+                "jobs": set(), "groups": set()})
+
+        with ex.cv:
+            for t in ex.tasks.values():
+                if t.state not in (State.QUEUED, State.RUNNING):
+                    continue
+                tenant = self.job_tenant.get(t.request.job_id, "default")
+                s = slot(tenant)
+                if t.state == State.QUEUED:
+                    s["queue_depth"] += 1
+                else:
+                    s["running"] += 1
+            for dep_id, spec in self.deployments.items():
+                tenant = self.job_tenant.get(spec.job_id, "default")
+                s = slot(tenant)
+                s["jobs"].add(spec.job_id)
+                s["groups"].add(self.group_of[dep_id])
+            for job_id, tenant in self.job_tenant.items():
+                slot(tenant)["jobs"].add(job_id)
+        ledger = self.tenant_ledger
+        if ledger is not None:
+            for tenant, acct in ledger.snapshot().items():
+                slot(tenant).update(acct)
+        for s in out.values():
+            s["jobs"] = sorted(s["jobs"])
+            s["groups"] = sorted(s["groups"])
         return out
 
     # ------------------------------------------------- elastic re-placement

@@ -5,12 +5,18 @@ admission — O(n log n) per pick, which PR 1 measured as the dominant cost of
 the dispatch plane's hot path. This module maintains the *same* argmax
 incrementally, exploiting the structure of the HRRS score
 
-    P_i(t) = 1 + max(0, t - a_i) / s_i,      s_i = max(e_i + C, 1e-9)
+    P_i(t) = rho_i * (1 + max(0, t - a_i) / s_i),  s_i = max(e_i + C, 1e-9)
 
 where ``C`` is the context-switch surcharge (``t_load + t_offload`` if the
-request's job is not resident, else 0). For t >= a_i each score is a line in
-``t``; any two lines cross at most once, so the winner of a pairwise
-comparison flips at most once in the future. A *kinetic tournament* — a
+request's job is not resident, else 0) and ``rho_i`` is the request's tenant
+priority (1.0 default). For t >= a_i each score is a line in ``t`` with
+slope ``rho_i / s_i``; any two lines cross at most once, so the winner of a
+pairwise comparison flips at most once in the future — the multiplicative
+priority term preserves the kinetic invariant. (Unequal priorities add one
+new event class: a risen line crossing the other's flat pre-arrival level
+``rho``; with equal priorities that crossing degenerates to the arrival
+kink, which was already an event, so default-tenant behaviour is
+unchanged.) A *kinetic tournament* — a
 flat-array tournament tree in the style of ``segment_tree.MinSegmentTree``,
 where every internal node caches its subtree's current winner plus a
 *certificate* (the earliest future time any comparison below it may flip) —
@@ -57,14 +63,15 @@ _GUARD = 1e-7
 class Entry:
     """Immutable scoring inputs of one queued request."""
 
-    __slots__ = ("req_id", "job_id", "arrival", "exec_time")
+    __slots__ = ("req_id", "job_id", "arrival", "exec_time", "priority")
 
     def __init__(self, req_id: int, job_id: str, arrival: float,
-                 exec_time: float):
+                 exec_time: float, priority: float = 1.0):
         self.req_id = req_id
         self.job_id = job_id
         self.arrival = arrival
         self.exec_time = exec_time
+        self.priority = priority
 
 
 class KineticTournament:
@@ -94,6 +101,8 @@ class KineticTournament:
         # per-slot service time s_i = max(e_i + C, 1e-9), cached because the
         # surcharge C is fixed per tournament (recomputed on set_setup)
         self.s: List[float] = [1.0] * size
+        # per-slot tenant priority rho_i (multiplicative score weight)
+        self.prio: List[float] = [1.0] * size
         self._free = list(range(size - 1, -1, -1))
 
     def __len__(self) -> int:
@@ -108,11 +117,13 @@ class KineticTournament:
 
     def _score_slot(self, slot: int, t: float) -> float:
         # identical floats to hrrs.queued_score, with s_i precomputed
+        # (prio * ((w + s) / s) matches hrrs_score's operation order exactly;
+        # 1.0 * x == x bit-for-bit, so default-tenant scores are unchanged)
         s = self.s[slot]
         w = t - self.entries[slot].arrival
         if w < 0.0:
             w = 0.0
-        return (w + s) / s
+        return self.prio[slot] * ((w + s) / s)
 
     def _beats(self, i: int, j: int, t: float) -> bool:
         """Exact Algorithm-1 comparison of slots i, j at time t."""
@@ -130,11 +141,14 @@ class KineticTournament:
         slots i, j may change; INF if the order is settled forever.
 
         The comparator can only change at an arrival kink (a score leaves
-        its flat wait=0 region) or at the single crossing of the two rising
-        lines. The crossing is widened to [ts - guard, ts + guard]; if ``t``
-        already sits inside the band the certificate is "immediately after
-        t", degrading to one exact re-comparison per query until the band is
-        cleared — never to a missed flip.
+        its flat wait=0 region), at the single crossing of the two rising
+        lines, or — with unequal tenant priorities — where one risen line
+        crosses the other's flat pre-arrival level ``rho`` (with equal
+        priorities that point degenerates to the arrival kink, already an
+        event). Every crossing is widened to [ts - guard, ts + guard]; if
+        ``t`` already sits inside the band the certificate is "immediately
+        after t", degrading to one exact re-comparison per query until the
+        band is cleared — never to a missed flip.
         """
         a, b = self.entries[i], self.entries[j]
         nxt = INF
@@ -144,15 +158,60 @@ class KineticTournament:
             nxt = b.arrival
         sa = self.s[i]
         sb = self.s[j]
-        if sa != sb:
-            d = sb - sa
-            ts = (a.arrival * sb - b.arrival * sa) / d
+        pa = self.prio[i]
+        pb = self.prio[j]
+        if pa == pb:
+            # equal priorities: the common factor rho cancels from the
+            # crossing solve, so keep the original algebra verbatim
+            # (bit-identical certificates on the default-tenant path)
+            if sa != sb:
+                d = sb - sa
+                ts = (a.arrival * sb - b.arrival * sa) / d
+                if ts != ts:           # NaN-safe: treat as "recheck next"
+                    return min(nxt, math.nextafter(t, INF))
+                guard = _GUARD * (1.0 + abs(ts)) + _GUARD * (
+                    sa * sb + abs(a.arrival) * sb
+                    + abs(b.arrival) * sa) / abs(d)
+                if ts + guard > t:     # crossing not safely behind us
+                    lo = ts - guard
+                    cand = lo if lo > t else math.nextafter(t, INF)
+                    if cand < nxt:
+                        nxt = cand
+            return nxt
+        # Unequal priorities. Joint crossing of the two rising lines
+        # rho_i * (1 + (t - a_i)/s_i): slopes k = rho/s, intercepts solved at
+        # each arrival.
+        ka = pa / sa
+        kb = pb / sb
+        if ka != kb:
+            d = ka - kb
+            ts = (ka * a.arrival - kb * b.arrival + pb - pa) / d
             if ts != ts:               # NaN-safe: treat as "recheck next"
                 return min(nxt, math.nextafter(t, INF))
             guard = _GUARD * (1.0 + abs(ts)) + _GUARD * (
-                sa * sb + abs(a.arrival) * sb + abs(b.arrival) * sa) / abs(d)
-            if ts + guard > t:         # crossing not safely behind us
+                abs(ka * a.arrival) + abs(kb * b.arrival)
+                + pa + pb) / abs(d)
+            if ts + guard > t:
                 lo = ts - guard
+                cand = lo if lo > t else math.nextafter(t, INF)
+                if cand < nxt:
+                    nxt = cand
+        # New event class: a risen line reaching the other's flat pre-arrival
+        # level rho_other, which can flip the winner strictly before the
+        # second arrival kink. Only relevant while the other line is still
+        # flat (crossing before its arrival, guard-widened).
+        for arr_r, p_r, s_r, arr_o, p_o in (
+                (a.arrival, pa, sa, b.arrival, pb),
+                (b.arrival, pb, sb, a.arrival, pa)):
+            if p_r <= 0.0:
+                continue
+            tf = arr_r + (p_o - p_r) * s_r / p_r
+            if tf != tf:               # NaN-safe
+                return min(nxt, math.nextafter(t, INF))
+            guard = _GUARD * (1.0 + abs(tf) + abs(arr_r)
+                              + abs(p_o - p_r) * s_r / p_r)
+            if tf - guard < arr_o and tf + guard > t:
+                lo = tf - guard
                 cand = lo if lo > t else math.nextafter(t, INF)
                 if cand < nxt:
                     nxt = cand
@@ -199,16 +258,17 @@ class KineticTournament:
 
     # -------------------------------------------------------------- public
     def insert(self, req_id: int, job_id: str, arrival: float,
-               exec_time: float, t: float):
+               exec_time: float, t: float, priority: float = 1.0):
         if req_id in self.slot_of:
             return
         self.advance(t)
         if not self._free:
             self._grow(t)
         slot = self._free.pop()
-        e = Entry(req_id, job_id, arrival, exec_time)
+        e = Entry(req_id, job_id, arrival, exec_time, priority)
         self.entries[slot] = e
         self.s[slot] = self._slot_s(e)
+        self.prio[slot] = e.priority
         self.slot_of[req_id] = slot
         self.win[self.size + slot] = slot
         self._pull_path(slot, t)
@@ -246,6 +306,7 @@ class KineticTournament:
             if e is not None:
                 self.entries[slot] = e
                 self.s[slot] = self._slot_s(e)
+                self.prio[slot] = e.priority
                 self.win[self.size + slot] = slot
         self._free = [s for s in range(self.size - 1, -1, -1)
                       if self.entries[s] is None]
@@ -272,7 +333,7 @@ class GroupAdmissionIndex:
         return len(self._job_of)
 
     def insert(self, req_id: int, job_id: str, arrival: float,
-               exec_time: float, now: float):
+               exec_time: float, now: float, priority: float = 1.0):
         if req_id in self._job_of:
             # upsert: a reused req_id must not leave a ghost entry behind
             # in another job's bucket (unreachable by remove() otherwise)
@@ -283,7 +344,7 @@ class GroupAdmissionIndex:
                 KineticTournament(switch=False, setup=self.setup),
                 KineticTournament(switch=True, setup=self.setup))
         for kt in pair:
-            kt.insert(req_id, job_id, arrival, exec_time, now)
+            kt.insert(req_id, job_id, arrival, exec_time, now, priority)
         self._job_of[req_id] = job_id
 
     def remove(self, req_id: int, now: float) -> bool:
@@ -315,7 +376,7 @@ class GroupAdmissionIndex:
                 continue
             switch = job_id != resident_job
             key = (-hrrs.queued_score(e.exec_time, e.arrival, now,
-                                      switch, self.setup),
+                                      switch, self.setup, e.priority),
                    e.arrival, e.req_id)
             if best_key is None or key < best_key:
                 best_key, best_id = key, e.req_id

@@ -201,7 +201,8 @@ class TaskExecutor:
     def _index_insert(self, task: Task):
         r = task.request
         self._index_for(task.group_id).insert(
-            r.req_id, r.job_id, r.arrival_time, r.exec_time, self.now())
+            r.req_id, r.job_id, r.arrival_time, r.exec_time, self.now(),
+            r.priority)
 
     def _index_remove(self, task: Task):
         idx = self._indexes.get(task.group_id)

@@ -2,12 +2,21 @@
 
 Extends HRRN with the context-switch setup cost in the denominator:
 
-    P_i(t) = (W_i(t) + S_i(t)) / S_i(t) = 1 + W_i / (E_i + 1_switch * C_setup)
+    P_i(t) = rho_i * (W_i(t) + S_i(t)) / S_i(t)
+           = rho_i * (1 + W_i / (E_i + 1_switch * C_setup))
 
 which batches same-deployment requests to amortise offload/load cycles while
-ageing prevents starvation. ``schedule`` is the faithful Algorithm 1:
-score all requests (running + queued + new), sort by score, then replay them
-onto a cursor timeline, prepending offload+load whenever the job changes.
+ageing prevents starvation. ``rho_i`` is the request's *tenant priority*
+(multi-tenant service layer): a multiplicative weight on the whole score
+line, 1.0 for the default tenant. The multiplicative form is deliberate —
+for t >= a_i each score stays a LINE in t (slope rho/s, intercept rho at
+arrival), so any two scores still cross at most once and the kinetic
+tournament in ``admission_index.py`` remains a valid incremental argmax.
+A priority-2 tenant's requests age twice as fast; starvation-freedom is
+preserved because every line has positive slope. ``schedule`` is the
+faithful Algorithm 1: score all requests (running + queued + new), sort by
+score, then replay them onto a cursor timeline, prepending offload+load
+whenever the job changes.
 
 Scoring is side-effect free: ``queued_score``/``score_request`` are pure
 functions of (request, now, resident job, setup cost), and ``schedule`` no
@@ -33,6 +42,8 @@ class Request:
     remaining_time: float = 0.0  # for the running request
     running: bool = False
     payload: object = None       # opaque: closure / simulated work descriptor
+    priority: float = 1.0        # tenant priority rho (multiplicative score
+                                 # weight; 1.0 = default tenant)
     score: float = 0.0           # informational scratch only; scoring is pure
                                  # (schedule never reads or writes this)
 
@@ -46,18 +57,21 @@ class Assignment:
 
 
 def hrrs_score(wait: float, exec_time: float, switch: bool,
-               setup_cost: float) -> float:
+               setup_cost: float, priority: float = 1.0) -> float:
     s = exec_time + (setup_cost if switch else 0.0)
     s = max(s, 1e-9)
-    return (wait + s) / s
+    return priority * ((wait + s) / s)
 
 
 def queued_score(exec_time: float, arrival_time: float, now: float,
-                 switch: bool, setup: float) -> float:
+                 switch: bool, setup: float, priority: float = 1.0) -> float:
     """Pure P_i(t) for a queued request: the one scoring formula shared by
     Algorithm 1's full re-score and the incremental admission index (both
-    must produce bit-identical floats for the equivalence guarantee)."""
-    return hrrs_score(max(0.0, now - arrival_time), exec_time, switch, setup)
+    must produce bit-identical floats for the equivalence guarantee).
+    ``priority`` multiplies the whole score; the default 1.0 is exact
+    (``1.0 * x == x`` bit-for-bit) so untenanted callers are unchanged."""
+    return hrrs_score(max(0.0, now - arrival_time), exec_time, switch, setup,
+                      priority)
 
 
 def score_request(r: Request, now: float, current_job: Optional[str],
@@ -65,9 +79,10 @@ def score_request(r: Request, now: float, current_job: Optional[str],
     """Pure Algorithm-1 score for ``r`` (does NOT mutate ``r``)."""
     if r.running:
         return queued_score(r.remaining_time, r.arrival_time, now,
-                            switch=False, setup=0.0)
+                            switch=False, setup=0.0, priority=r.priority)
     return queued_score(r.exec_time, r.arrival_time, now,
-                        switch=r.job_id != current_job, setup=setup)
+                        switch=r.job_id != current_job, setup=setup,
+                        priority=r.priority)
 
 
 def sort_key(r: Request, now: float, current_job: Optional[str],

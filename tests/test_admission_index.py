@@ -271,6 +271,185 @@ def test_prereq_lifecycle_keeps_index_membership_exact():
     assert _oracle_req(ex, 0) is None and _indexed_req(ex, 0) is None
 
 
+# ------------------------------------- multi-tenant priority term (PR 8)
+def _brute_pick_prio(entries, t, switch, setup):
+    """Reference argmax over (req_id, job, arrival, exec, priority) tuples
+    with the exact Algorithm-1 key including the tenant priority weight."""
+    if not entries:
+        return None
+    best = min(entries, key=lambda e: (
+        -hrrs.queued_score(e[3], e[2], t, switch, setup, e[4]), e[2], e[0]))
+    return best[0]
+
+
+def test_priority_flat_level_crossing_fires():
+    """The NEW event class unequal priorities introduce: a risen low-prio
+    line crossing a high-prio entry's flat pre-arrival level, strictly
+    before the second arrival kink. rho_a=1 (arrival 0, s=1) climbs as
+    1 + t; rho_b=10 sits flat at 10 until its arrival at t=100 — the winner
+    flips at t=9, far from any arrival. A certificate that only knew
+    arrival kinks and the joint rising crossing would fire late and miss
+    the flip."""
+    kt = KineticTournament(switch=False, setup=0.0)
+    kt.insert(1, "a", arrival=0.0, exec_time=1.0, t=0.0, priority=1.0)
+    kt.insert(2, "b", arrival=100.0, exec_time=1.0, t=0.0, priority=10.0)
+    assert kt.peek(0.0).req_id == 2     # 10 > 1
+    assert kt.peek(5.0).req_id == 2     # 10 > 6
+    assert kt.peek(8.9).req_id == 2
+    assert kt.peek(9.5).req_id == 1     # 10.5 > 10: the riser overtook
+    assert kt.peek(50.0).req_id == 1
+    # after b arrives its line rises 10x as fast and retakes the lead
+    # once 10*(t-100+1) > t+1, i.e. t > 991/9
+    assert kt.peek(101.0).req_id == 1   # 102 > 20: not yet
+    assert kt.peek(111.0).req_id == 2   # 120 > 112
+
+
+def test_priority_identity_is_exact_noop():
+    """priority=1.0 must produce bit-identical scores to the pre-tenancy
+    formula (1.0 * x == x in IEEE754) — the default tenant's behaviour is
+    unchanged, not merely close."""
+    for w, e, sw, setup in ((0.0, 1.0, False, 0.0), (17.3, 2.5, True, 7.5),
+                            (1e9, 1e-9, True, 3.0)):
+        assert (hrrs.hrrs_score(w, e, sw, setup, 1.0)
+                == hrrs.hrrs_score(w, e, sw, setup))
+
+
+@settings(max_examples=40)
+@given(st.data())
+def test_priority_tournament_matches_brute_force(data):
+    """Random insert/remove/advance mix over MIXED-priority pools (future
+    arrivals included, so flat-level crossings actually occur): the
+    tournament's peek equals the priority-weighted brute-force argmax at
+    every probe time."""
+    switch = data.draw(st.booleans())
+    setup = data.draw(st.sampled_from([0.0, 1.0, 7.5]))
+    kt = KineticTournament(switch=switch, setup=setup)
+    live = {}
+    t = 0.0
+    next_id = 1
+    for _ in range(data.draw(st.integers(min_value=10, max_value=60))):
+        action = data.draw(st.sampled_from(
+            ["insert", "insert", "insert", "remove", "jump", "crawl"]))
+        if action == "insert":
+            # arrivals both behind and AHEAD of now: the pre-arrival flat
+            # segment is where the new crossing class lives
+            arrival = t + float(data.draw(st.integers(-8, 12)))
+            exec_time = float(data.draw(st.sampled_from(
+                [0.5, 1.0, 1.0, 2.0, 4.0, 16.0])))
+            prio = float(data.draw(st.sampled_from(
+                [0.5, 1.0, 1.0, 2.0, 4.0, 10.0])))
+            kt.insert(next_id, "a", arrival, exec_time, t, priority=prio)
+            live[next_id] = (next_id, "a", arrival, exec_time, prio)
+            next_id += 1
+        elif action == "remove" and live:
+            victim = data.draw(st.sampled_from(sorted(live)))
+            kt.remove(victim, t)
+            del live[victim]
+        elif action == "jump":
+            t += float(data.draw(st.floats(0.0, 1000.0)))
+        else:
+            t += float(data.draw(st.floats(0.0, 0.5)))
+        got = kt.peek(t)
+        want = _brute_pick_prio(list(live.values()), t, switch, setup)
+        assert (got.req_id if got else None) == want, (t, sorted(live))
+
+
+@settings(max_examples=30)
+@given(st.data())
+def test_index_equals_algorithm1_under_mixed_priorities(data):
+    """The acceptance-pinned property: through the REAL wired executor
+    path, with each job carrying a distinct tenant priority weight, the
+    indexed pick equals the full Algorithm-1 re-score
+    (``pick_next_full``) after every event — the kinetic tournament stays
+    a valid incremental argmax with the multiplicative tenant term on."""
+    clock = VirtualClock()
+    ex = TaskExecutor(now=clock, policy="hrrs")
+    n_groups = data.draw(st.integers(1, 2))
+    groups = list(range(n_groups))
+    jobs = [f"job{j}" for j in range(data.draw(st.integers(2, 4)))]
+    prio_of = {job: float(data.draw(st.sampled_from(
+        [0.5, 1.0, 2.0, 4.0, 10.0]))) for job in jobs}
+    next_id = 1
+    running = {g: [] for g in groups}
+
+    for step in range(data.draw(st.integers(10, 50))):
+        action = data.draw(st.sampled_from(
+            ["submit", "submit", "submit", "start", "finish", "fail",
+             "advance", "big_jump", "recalibrate"]))
+        if action == "submit":
+            prereqs = ()
+            if data.draw(st.booleans()) and next_id > 1:
+                prereqs = (data.draw(st.integers(1, next_id - 1)),)
+            exec_time = float(data.draw(st.sampled_from(
+                [0.5, 1.0, 1.0, 2.0, 2.0, 5.0])))
+            arrival = clock.now() - float(data.draw(st.integers(0, 4)))
+            g = data.draw(st.sampled_from(groups))
+            job = data.draw(st.sampled_from(jobs))
+            ex.submit(hrrs.Request(req_id=next_id, job_id=job,
+                                   op="forward", exec_time=exec_time,
+                                   arrival_time=arrival,
+                                   priority=prio_of[job]),
+                      g, prerequisites=prereqs)
+            next_id += 1
+        elif action == "start":
+            g = data.draw(st.sampled_from(groups))
+            task = ex.pick_next(g)
+            assert (None if task is None else task.request.req_id) == \
+                _oracle_req(ex, g), f"step {step}: pre-start divergence"
+            if task is not None and ex.try_start(task):
+                running[g].append(task)
+        elif action in ("finish", "fail"):
+            g = data.draw(st.sampled_from(groups))
+            if running[g]:
+                task = running[g].pop(0)
+                ex.finish(task, error="injected" if action == "fail"
+                          else None)
+        elif action == "advance":
+            clock.advance(float(data.draw(st.floats(0.0, 2.0))))
+        elif action == "big_jump":
+            clock.advance(float(data.draw(st.floats(50.0, 5000.0))))
+        else:
+            g = data.draw(st.sampled_from(groups))
+            ex.set_setup_costs(g, float(data.draw(st.floats(0.0, 10.0))),
+                               float(data.draw(st.floats(0.0, 10.0))))
+        _assert_equiv(ex, groups, f"step {step} after {action} (prio)")
+
+    for g in groups:
+        for task in running[g]:
+            ex.finish(task)
+        while True:
+            _assert_equiv(ex, groups, "drain (prio)")
+            task = ex.pick_next(g)
+            if task is None or not ex.try_start(task):
+                break
+            ex.finish(task)
+            clock.advance(0.25)
+
+
+def test_priority_ages_faster_but_never_starves():
+    """A priority-4 job's requests overtake an equal-arrival default-tenant
+    request, yet the default request still wins eventually over a LATER
+    high-priority arrival (positive slope = starvation-freedom)."""
+    clock = VirtualClock()
+    ex = TaskExecutor(now=clock, policy="hrrs")
+    ex.submit(hrrs.Request(req_id=1, job_id="be", op="f", exec_time=2.0,
+                           arrival_time=0.0, priority=1.0), 0)
+    ex.submit(hrrs.Request(req_id=2, job_id="vip", op="f", exec_time=2.0,
+                           arrival_time=0.0, priority=4.0), 0)
+    clock.advance(1.0)
+    assert _indexed_req(ex, 0) == _oracle_req(ex, 0) == 2  # vip ages 4x
+    # a long-waiting default request beats a FRESH vip arrival: its line
+    # kept climbing while the vip's starts back at its intercept
+    clock.advance(1000.0)
+    ex.submit(hrrs.Request(req_id=3, job_id="vip", op="f", exec_time=2.0,
+                           arrival_time=clock.now(), priority=4.0), 0)
+    t = ex.pick_next(0)
+    ex.try_start(t)
+    assert t.request.req_id == 2
+    ex.finish(t)
+    assert _indexed_req(ex, 0) == _oracle_req(ex, 0) == 1  # not starved
+
+
 # ------------------------------------------------- scoring purity (hrrs)
 def test_schedule_is_side_effect_free():
     """hrrs.schedule must not mutate its input Requests: the index and the
