@@ -4,7 +4,7 @@ Prints ``name,value,derived`` CSV and writes a machine-readable
 ``BENCH_<pr>.json`` (row name -> {value, units}) so the performance
 trajectory is tracked across PRs. Run:
 
-    PYTHONPATH=src python -m benchmarks.run [--json BENCH_PR8.json]
+    PYTHONPATH=src python -m benchmarks.run [--json BENCH_PR9.json]
 """
 from __future__ import annotations
 
@@ -13,7 +13,7 @@ import json
 import sys
 import time
 
-BENCH_JSON = "BENCH_PR8.json"
+BENCH_JSON = "BENCH_PR9.json"
 
 
 def write_bench_json(rows: list, path: str) -> None:

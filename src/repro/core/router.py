@@ -51,7 +51,9 @@ from repro.core.scheduler import hrrs
 from repro.core.scheduler.executor import State, Task, TaskExecutor
 from repro.core.state_manager import StateManager, Tier
 from repro.core.worker import WorkerProcessGroup
-from repro.launch.mesh import DevicePlane
+from repro.launch.mesh import DevicePlane, env_for_slice
+from repro.launch.proc_plane import (GroupProcess, StateManagerProxy,
+                                     WPGProxy)
 
 logger = logging.getLogger(__name__)
 
@@ -61,8 +63,25 @@ class Router:
                  policy: str = "hrrs",
                  wpg_factory: Callable[..., object] = WorkerProcessGroup,
                  device_plane: Optional[DevicePlane] = None,
-                 devices_per_group: Optional[int] = None):
+                 devices_per_group: Optional[int] = None,
+                 process_plane: bool = False,
+                 proc_wpg_factory: Optional[str] = None):
+        """``process_plane=True`` hosts each node group's WPGs in a separate
+        OS process bound to the group's mesh slice (launch/proc_plane.py):
+        dispatch crosses an IPC pipe instead of a method call, so groups on
+        disjoint slices overlap as real OS-level parallelism instead of
+        GIL-bound threads. In-process mode (the default) is bit-identical
+        to the pre-process-plane plane — including VirtualClock replay.
+        ``proc_wpg_factory`` names the child-side factory as
+        "module:callable" (factories cross the spawn boundary by name, not
+        pickle); None means the real WorkerProcessGroup."""
         self.now = now
+        self.process_plane = process_plane
+        self.proc_wpg_factory = proc_wpg_factory
+        self.group_procs: Dict[int, GroupProcess] = {}
+        # dispatch workers hung inside wpg.execute past their abandon grace
+        # (daemon threads we can't kill) — reported, never silently dropped
+        self._abandoned: List[threading.Thread] = []
         self.wpgs: Dict[str, object] = {}
         self.deployments: Dict[str, api.DeploymentSpec] = {}
         self.group_of: Dict[str, int] = {}       # deployment -> node group
@@ -106,16 +125,31 @@ class Router:
         """The group's StateManager, creating it (and leasing the group's
         mesh slice from the device plane) on first sight. The slice lease
         is what gives the group hardware affinity: every WPG on the group
-        reads ``sm.mesh_slice`` for its jit/sharding mesh."""
+        reads ``sm.mesh_slice`` for its jit/sharding mesh. In process mode
+        first sight also SPAWNS the group's worker process (launch returns
+        immediately; the ready handshake is awaited on first use) and the
+        returned object is a :class:`StateManagerProxy` over its pipe."""
         sm = self.state_managers.get(group_id)
         if sm is None:
-            sm = StateManager(
-                node_id=f"group{group_id}", clock=self.now,
-                mesh_slice=self.device_plane.slice_for_group(group_id))
+            sl = self.device_plane.slice_for_group(group_id)
+            if self.process_plane:
+                sm = self._spawn_group_process(group_id, sl)
+            else:
+                sm = StateManager(node_id=f"group{group_id}",
+                                  clock=self.now, mesh_slice=sl)
             self.state_managers[group_id] = sm
         elif sm.mesh_slice is None:
             sm.mesh_slice = self.device_plane.slice_for_group(group_id)
         return sm
+
+    def _spawn_group_process(self, group_id: int, sl) -> StateManagerProxy:
+        gp = GroupProcess(group_id, env=env_for_slice(sl),
+                          slice_index=sl.index,
+                          wpg_factory=self.proc_wpg_factory,
+                          node_id=f"group{group_id}")
+        self.group_procs[group_id] = gp
+        return StateManagerProxy(gp, mesh_slice=sl,
+                                 node_id=f"group{group_id}")
 
     def mesh_domains(self) -> Dict[int, int]:
         """group id -> mesh-slice index (the placement layer's domain map:
@@ -127,10 +161,17 @@ class Router:
         """Register a deployment (low level; returns the WPG). While serving,
         a deployment on a group without a dispatch worker spawns one, so
         jobs attach to a live plane without a restart."""
+        if state_manager is not None and self.process_plane:
+            raise RuntimeError("explicit state_manager is incompatible with "
+                               "process_plane (state lives in the group's "
+                               "worker process)")
         with self.executor.cv:
             sm = state_manager or self._group_sm(group_id)
             self.state_managers[group_id] = sm
-        wpg = self.wpg_factory(spec, sm)
+        # built OUTSIDE the cv: a slow model build (or the child process's
+        # create_deployment round trip) must not stall the dispatch plane
+        wpg = WPGProxy(spec, sm) if self.process_plane \
+            else self.wpg_factory(spec, sm)
         with self.executor.cv:
             self.wpgs[spec.deployment_id] = wpg
             self.deployments[spec.deployment_id] = spec
@@ -203,6 +244,9 @@ class Router:
                                     for q in self.pending.values()),
                     timeout=120.0)
             wpg.sm.unregister(wpg.sm.keys_for(wpg.job_prefix))
+            close = getattr(wpg, "close", None)
+            if close is not None:       # process mode: drop the child-side WPG
+                close()
         if cancelled:
             try:
                 for qop, err in cancelled:
@@ -535,10 +579,16 @@ class Router:
         for t in self._serve_threads.values():
             t.join(timeout=None if deadline is None
                    else max(0.0, deadline - time.monotonic()))
+        leaked = [t for t in self._serve_threads.values() if t.is_alive()]
         with self.executor.cv:
             self._serving = False
             self._serve_threads = {}
             self._serve_stops = {}
+            self._abandoned.extend(leaked)
+        for t in leaked:
+            logger.warning(
+                "serve worker %s still hung in execute at shutdown; "
+                "abandoned as a daemon (see abandoned_workers())", t.name)
         self._raise_callback_errors(self._serve_err_start)
 
     def __enter__(self) -> "Router":
@@ -566,6 +616,43 @@ class Router:
         with ex.cv:
             return ex.cv.wait_for(
                 lambda: ex.outstanding() == 0 and ex.inflight == 0, timeout)
+
+    def abandoned_workers(self) -> List[str]:
+        """Names of dispatch workers abandoned while hung in ``execute``
+        (bounded drivers give up after their grace; the threads are daemons
+        and exit when their op finally returns — entries self-prune here)."""
+        with self.executor.cv:
+            self._abandoned = [t for t in self._abandoned if t.is_alive()]
+            return [t.name for t in self._abandoned]
+
+    # ------------------------------------------------------- process plane
+    def process_health(self) -> Dict[int, bool]:
+        """group id -> worker-process liveness (process mode; empty dict in
+        thread mode)."""
+        return {gid: gp.alive() for gid, gp in self.group_procs.items()}
+
+    def respawn_dead_groups(self) -> List[int]:
+        """Respawn every dead group worker process in place (deployments
+        replayed; managed state lost — device-failure semantics). Called by
+        the capacity adjuster each poll; returns the respawned group ids.
+        A no-op in thread mode, so VirtualClock replay never sees it."""
+        respawned: List[int] = []
+        for gid, gp in list(self.group_procs.items()):
+            if not gp.alive():
+                logger.warning("group %d worker process died (exitcode %s); "
+                               "respawning", gid,
+                               None if gp._proc is None else gp._proc.exitcode)
+                gp.respawn()
+                respawned.append(gid)
+        return respawned
+
+    def close_processes(self, timeout: float = 10.0):
+        """Shut down every group worker process (graceful protocol shutdown,
+        escalating to terminate). Benches/tests call this at exit; children
+        are daemons, so an unclosed plane still dies with the parent."""
+        for gp in self.group_procs.values():
+            gp.shutdown(timeout=timeout)
+        self.group_procs.clear()
 
     # ------------------------------------------- group lifecycle / telemetry
     def known_groups(self) -> List[int]:
@@ -621,6 +708,7 @@ class Router:
             if self._serving:
                 self._ensure_serve_worker(group_id)
             raise
+        gp = None
         with ex.cv:
             # re-check under the lock: an attach that raced past drop_group
             # owns the group again — leave its (empty) StateManager alone
@@ -630,6 +718,9 @@ class Router:
                     del self.state_managers[group_id]
                     # return the group's mesh-slice lease to the plane
                     self.device_plane.release(group_id)
+                    gp = self.group_procs.pop(group_id, None)
+        if gp is not None:          # outside the cv: shutdown joins the child
+            gp.shutdown()
 
     def group_telemetry(self) -> Dict[int, dict]:
         """Per-group queue-depth / occupancy snapshot (the §4.4 capacity
@@ -652,6 +743,10 @@ class Router:
                         d for d, gg in self.group_of.items() if gg == g),
                     "worker": g in self._serve_threads,
                 }
+        if self.process_plane:
+            for g, d in out.items():
+                gp = self.group_procs.get(g)
+                d["process_alive"] = bool(gp is not None and gp.alive())
         return out
 
     def tenant_telemetry(self) -> Dict[str, dict]:
@@ -859,6 +954,16 @@ class Router:
                 # be killed) gets a 1 s grace, then is abandoned (daemon) so
                 # the timeout still bounds this call — reported below
                 t.join(timeout=max(0.0, deadline + 1.0 - time.monotonic()))
+                if t.is_alive():
+                    # the abandon used to drop the handle on the floor: a
+                    # WPG hung in execute leaked its worker invisibly, and
+                    # shutdown() had nothing to report. Track it.
+                    with ex.cv:
+                        self._abandoned.append(t)
+                    logger.warning(
+                        "dispatch worker %s hung in execute past the "
+                        "abandon grace; leaked as a daemon (see "
+                        "abandoned_workers())", t.name)
                 break
         if timed_out.is_set():
             with ex.cv:

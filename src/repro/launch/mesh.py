@@ -79,6 +79,22 @@ class MeshSlice:
         return tuple(d.id for d in self.devices)
 
 
+def env_for_slice(sl: MeshSlice) -> Dict[str, str]:
+    """The child-process environment that makes a spawned group process see
+    EXACTLY its slice's devices. On the CPU backend there is no per-device
+    visibility mask, so the child gets its own virtual-device world of the
+    slice's size (slice identity is positional there — fine, since CPU
+    devices are fungible). On real accelerators, visibility masking means
+    the child's ``jax.devices()`` IS the slice. Must be applied in the
+    child before jax's backend initialises — see launch/proc_plane.py."""
+    if all(d.platform == "cpu" for d in sl.devices):
+        return {"JAX_PLATFORMS": "cpu",
+                "XLA_FLAGS":
+                    f"--xla_force_host_platform_device_count={sl.n_devices}"}
+    ids = ",".join(str(i) for i in sl.device_ids())
+    return {"CUDA_VISIBLE_DEVICES": ids, "JAX_VISIBLE_DEVICES": ids}
+
+
 class DevicePlane:
     """Carves ``jax.devices()`` into disjoint mesh slices and leases them
     to node groups.

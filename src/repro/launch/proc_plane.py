@@ -1,0 +1,697 @@
+"""Process plane: per-group worker processes with an IPC dispatch protocol.
+
+Thread-mode dispatch workers share one interpreter, so two groups' jit
+dispatches serialize on the GIL even when the device plane gives them
+disjoint ``MeshSlice``\\ s. The process plane makes cross-group overlap real
+wall-clock parallelism on one host: each node group's WPGs live in a
+separate OS process bound to the group's device slice, and the Router's
+dispatch protocol crosses an IPC boundary instead of a method call.
+
+Pieces
+------
+- :class:`GroupProcess` — parent-side handle on one group's worker process.
+  Spawned (never forked: jax + threads make fork unsafe) with an
+  environment derived from the group's slice
+  (:func:`repro.launch.mesh.env_for_slice` — ``XLA_FLAGS`` /
+  ``JAX_VISIBLE_DEVICES`` applied in the child BEFORE jax imports), talking
+  a length-prefixed pickle protocol over a ``multiprocessing`` duplex pipe:
+  ``create_deployment`` / ``execute`` / ``migrate_export`` /
+  ``migrate_import`` / ``sync_export`` / ``shutdown`` / ``ping`` (the
+  liveness heartbeat). ``respawn()`` replaces a dead child in place and
+  replays its deployment registrations.
+- :class:`WPGProxy` — what ``Router.wpgs[dep]`` holds in process mode: the
+  WorkerProcessGroup surface dispatch, teardown, billing and migration
+  touch, forwarded over the pipe. Each completed ``execute`` reply carries
+  the child's ``(op, seconds)`` log entry, which the proxy appends to a
+  LOCAL :class:`~repro.core.worker.ExecLog` mirror — billing cursors read
+  the standard ring, and completed work stays billed even if the child
+  later dies mid-op.
+- :class:`StateManagerProxy` — the group StateManager surface the Router
+  reads (job bytes, setup-cost estimates, keys, unregister), plus
+  cross-process :meth:`StateManagerProxy.migrate` composed from the
+  child-side ``StateManager.export_state`` / ``import_state`` pair
+  (host-staged arrays over the pipe, disk-tier fallback for large entries).
+
+The parent thread blocking in ``recv`` releases the GIL, so per-group
+dispatch threads proxying into different children genuinely overlap.
+
+This module imports ONLY the stdlib at module level: a spawned child
+imports it before applying its device environment, so any transitive jax
+import here would bind the child to the parent's device world. jax-touching
+imports (worker, state_manager, mesh) happen lazily, after the env is set.
+"""
+from __future__ import annotations
+
+import importlib
+import itertools
+import logging
+import multiprocessing
+import os
+import pickle
+import struct
+import sys
+import threading
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+logger = logging.getLogger(__name__)
+
+_LEN = struct.Struct("!I")
+_nonce = itertools.count(1)
+
+
+class GroupProcessError(RuntimeError):
+    """The group's worker process is dead or the channel broke mid-call."""
+
+
+# ------------------------------------------------------------ wire format
+def _send(conn, obj) -> None:
+    """One frame: a 4-byte big-endian length prefix + the pickled message.
+    ``send_bytes`` keeps the frame atomic on the pipe; the explicit prefix
+    lets the receiver reject a truncated or corrupted frame instead of
+    unpickling garbage."""
+    buf = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    conn.send_bytes(_LEN.pack(len(buf)) + buf)
+
+
+def _recv(conn):
+    raw = conn.recv_bytes()
+    if len(raw) < _LEN.size:
+        raise EOFError("truncated frame (no length prefix)")
+    (n,) = _LEN.unpack_from(raw)
+    if len(raw) - _LEN.size != n:
+        raise EOFError(
+            f"frame length mismatch: prefix says {n}, got {len(raw) - _LEN.size}")
+    return pickle.loads(raw[_LEN.size:])
+
+
+def _resolve_factory(ref: Optional[str]):
+    """Factories cross the spawn boundary by NAME ("module:callable"), not
+    by pickle — a lambda in a test module would not survive spawn. None
+    resolves to the real WorkerProcessGroup (imports jax, in the child,
+    after the device env is applied)."""
+    if ref is None:
+        from repro.core.worker import WorkerProcessGroup
+        return WorkerProcessGroup
+    mod, _, name = ref.partition(":")
+    if not name:
+        raise ValueError(f"factory ref {ref!r} is not 'module:callable'")
+    return getattr(importlib.import_module(mod), name)
+
+
+def _to_host(obj):
+    """Stage a result tree to host numpy for the reply pickle. Only does
+    work when jax is actually loaded in this process — lite stub children
+    never import it."""
+    if "jax" not in sys.modules:
+        return obj
+    import jax
+    import numpy as np
+
+    def conv(x):
+        return np.asarray(jax.device_get(x)) if isinstance(x, jax.Array) else x
+
+    return jax.tree.map(conv, obj)
+
+
+# ------------------------------------------------------------- child side
+class _LiteSM:
+    """Featherweight StateManager stand-in for stub factories
+    (``needs_state_manager = False`` on the factory): keeps the child
+    jax-free, so a stub group process spawns in ~100 ms."""
+
+    mesh_slice = None
+
+    def __init__(self):
+        self.entries: Dict[str, Any] = {}
+
+    def job_bytes(self, job_id: str) -> int:
+        return 0
+
+    def load_time_estimate(self, nbytes: int) -> float:
+        return 0.0
+
+    def offload_time_estimate(self, nbytes: int) -> float:
+        return 0.0
+
+    def keys_for(self, job_id: str, prefix=None) -> list:
+        return []
+
+    def unregister(self, keys) -> None:
+        pass
+
+
+class _ChildState:
+    """Everything the group's worker process owns: its (lazily created)
+    StateManager bound to a mesh over ALL the devices the child can see —
+    which, by env construction, IS the group's slice — and one real WPG per
+    registered deployment."""
+
+    def __init__(self, cfg: Dict[str, Any]):
+        self.cfg = cfg
+        self.wpgs: Dict[str, Any] = {}
+        self._sm = None
+        self._lite: Optional[_LiteSM] = None
+
+    @property
+    def sm(self):
+        return self._sm if self._sm is not None else self._lite
+
+    def _state_manager(self, needs_real: bool):
+        if not needs_real:
+            if self._lite is None:
+                self._lite = _LiteSM()
+            return self._lite
+        if self._sm is None:
+            import jax
+
+            from repro.core.state_manager import StateManager
+            from repro.launch.mesh import MeshSlice, _slice_mesh
+
+            sm = StateManager(node_id=self.cfg["node_id"])
+            devs = tuple(jax.devices())
+            sm.mesh_slice = MeshSlice(index=self.cfg["slice_index"],
+                                      devices=devs, mesh=_slice_mesh(devs))
+            self._sm = sm
+        return self._sm
+
+    # ---------------------------------------------------------- handlers
+    def handle(self, kind: str, payload) -> Tuple[Any, Any]:
+        return getattr(self, f"_h_{kind}")(payload)
+
+    def _h_create_deployment(self, p):
+        factory = _resolve_factory(p["factory"])
+        sm = self._state_manager(getattr(factory, "needs_state_manager", True))
+        self.wpgs[p["spec"].deployment_id] = factory(p["spec"], sm)
+        return None, None
+
+    def _h_drop_deployment(self, p):
+        self.wpgs.pop(p["dep"], None)
+        return None, None
+
+    def _h_execute(self, p):
+        from repro.core import api
+
+        wpg = self.wpgs[p["dep"]]
+        op = api.Op(p["op"])
+        args = tuple(p["args"])
+        if (op is api.Op.SYNC_WEIGHTS and args
+                and isinstance(args[0], tuple) and len(args[0]) == 2
+                and args[0][0] == "__dep__"):
+            # same-child weight sync: the dep-id marker resolves to the
+            # co-resident target WPG (cross-child syncs never reach here —
+            # WPGProxy orchestrates sync_export/store_params instead)
+            args = (self.wpgs[args[0][1]],) + args[1:]
+        qop = api.QueuedOperation(
+            req_id=p["req_id"], deployment_id=p["dep"], job_id=p["job_id"],
+            op=op, args=args, kwargs=dict(p["kwargs"]))
+        t0 = time.monotonic()
+        result = wpg.execute(qop)
+        return _to_host(result), (op.value, time.monotonic() - t0)
+
+    def _h_resident(self, p):
+        return self.wpgs[p["dep"]].resident(), None
+
+    def _h_ensure_resident(self, p):
+        return self.wpgs[p["dep"]].ensure_resident(), None
+
+    def _h_offload(self, p):
+        from repro.core.state_manager import Tier
+        return self.wpgs[p["dep"]].offload(Tier(p["tier"])), None
+
+    def _h_sync_export(self, p):
+        return self.wpgs[p["dep"]].host_params(), None
+
+    def _h_store_params(self, p):
+        wpg = self.wpgs[p["dep"]]
+        tree = p["tree"]
+        shardings = wpg.param_shardings() \
+            if hasattr(wpg, "param_shardings") else None
+        if shardings is not None:
+            import jax
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        wpg._store(params=tree)
+        return None, None
+
+    def _h_job_bytes(self, p):
+        return (0 if self.sm is None else self.sm.job_bytes(p["job"])), None
+
+    def _h_load_estimate(self, p):
+        sm = self.sm
+        return (0.0 if sm is None
+                else sm.load_time_estimate(p["nbytes"])), None
+
+    def _h_offload_estimate(self, p):
+        sm = self.sm
+        return (0.0 if sm is None
+                else sm.offload_time_estimate(p["nbytes"])), None
+
+    def _h_keys_for(self, p):
+        sm = self.sm
+        return ([] if sm is None
+                else list(sm.keys_for(p["job"], p.get("prefix")))), None
+
+    def _h_all_keys(self, p):
+        return ([] if self.sm is None else list(self.sm.entries)), None
+
+    def _h_unregister(self, p):
+        if self.sm is not None:
+            self.sm.unregister(p["keys"])
+        return None, None
+
+    def _h_migrate_export(self, p):
+        sm = self._state_manager(True)
+        return sm.export_state(p["job"],
+                               max_inline_bytes=p["max_inline"]), None
+
+    def _h_migrate_import(self, p):
+        sm = self._state_manager(True)
+        return sm.import_state(p["payload"]), None
+
+    def _h_drop_job_state(self, p):
+        sm = self.sm
+        if sm is not None:
+            sm.unregister(sm.keys_for(p["job"]))
+        return None, None
+
+
+def _group_main(conn, cfg: Dict[str, Any]) -> None:
+    """Worker-process entry point. The FIRST statement applies the slice
+    environment — jax reads ``XLA_FLAGS`` / visibility variables at backend
+    init, so nothing jax-touching may be imported before this line (this
+    module keeps its own imports stdlib-only for exactly that reason)."""
+    os.environ.update(cfg["env"])
+    state = _ChildState(cfg)
+    try:
+        _send(conn, ("ready", os.getpid()))
+    except OSError:
+        return
+    while True:
+        try:
+            kind, payload = _recv(conn)
+        except (EOFError, OSError):
+            break                      # parent went away: exit with it
+        if kind == "shutdown":
+            try:
+                _send(conn, ("ok", None, None))
+            except OSError:
+                pass
+            break
+        if kind == "ping":
+            try:
+                _send(conn, ("ok", payload, None))
+            except OSError:
+                break
+            continue
+        try:
+            result, extra = state.handle(kind, payload)
+            reply = ("ok", result, extra)
+        except BaseException as e:  # noqa: BLE001 - surface to the parent
+            reply = ("err", f"{type(e).__name__}: {e}",
+                     traceback.format_exc())
+        try:
+            _send(conn, reply)
+        except (OSError, pickle.PicklingError) as e:
+            # an unpicklable result must fail the one op, not kill the
+            # channel mid-frame protocol
+            try:
+                _send(conn, ("err", f"reply serialization failed: {e}", None))
+            except OSError:
+                break
+
+
+# ------------------------------------------------------------ parent side
+class GroupProcess:
+    """Parent-side handle on one node group's worker process.
+
+    The request/reply protocol is strictly serial per process, guarded by
+    an RLock — per-group dispatch is already serialized by the executor's
+    group locks, so the lock only orders control-plane calls (migration,
+    teardown, heartbeat) against dispatch. A blocked ``recv`` releases the
+    GIL: this is where cross-group overlap becomes real.
+
+    ``start()`` returns as soon as the OS process is launched; the ready
+    handshake (env applied, module imports done) is awaited lazily on the
+    first call, so spawning a group under the executor lock does not stall
+    the plane for the child's interpreter boot."""
+
+    def __init__(self, group_id: int, env: Optional[Dict[str, str]] = None,
+                 slice_index: int = 0, wpg_factory: Optional[str] = None,
+                 node_id: Optional[str] = None, start: bool = True):
+        self.group_id = group_id
+        self.env = dict(env or {})
+        self.slice_index = slice_index
+        self.wpg_factory = wpg_factory
+        self.node_id = node_id or f"group{group_id}-proc"
+        self._lock = threading.RLock()
+        self._conn = None
+        self._proc = None
+        self._ready = False
+        self._broken = False
+        self.spawn_count = 0
+        # replayed on respawn() so proxies survive a child crash
+        self._deployments: Dict[str, dict] = {}
+        if start:
+            self.start()
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        ctx = multiprocessing.get_context("spawn")   # fork is unsafe: jax + threads
+        parent_conn, child_conn = ctx.Pipe(duplex=True)
+        cfg = {"group_id": self.group_id, "env": self.env,
+               "slice_index": self.slice_index, "node_id": self.node_id}
+        proc = ctx.Process(target=_group_main, args=(child_conn, cfg),
+                           name=f"plexrl-g{self.group_id}", daemon=True)
+        proc.start()
+        child_conn.close()             # our copy; EOF now tracks the child
+        self._conn, self._proc = parent_conn, proc
+        self._ready = False
+        self._broken = False
+        self.spawn_count += 1
+
+    def _ensure_ready(self, timeout: float = 180.0) -> None:
+        if self._ready:
+            return
+        if not self._conn.poll(timeout):
+            raise GroupProcessError(
+                f"group {self.group_id} worker process sent no ready "
+                f"handshake within {timeout}s")
+        kind, _pid = _recv(self._conn)
+        if kind != "ready":
+            raise GroupProcessError(
+                f"group {self.group_id}: bad handshake {kind!r}")
+        self._ready = True
+
+    def alive(self) -> bool:
+        # the broken flag covers the race where the channel already hit EOF
+        # (the child called os._exit) but the OS hasn't reaped it yet —
+        # health must flip dead the moment a call observed the death
+        return (self._proc is not None and not self._broken
+                and self._proc.is_alive())
+
+    def pid(self) -> Optional[int]:
+        return None if self._proc is None else self._proc.pid
+
+    # ----------------------------------------------------------- protocol
+    def call(self, kind: str, payload=None, timeout: Optional[float] = None):
+        """One request/reply round trip. Returns ``(value, extra)``. A
+        remote exception re-raises here as RuntimeError (with the child's
+        traceback attached as ``remote_traceback``); a dead child or broken
+        channel raises :class:`GroupProcessError`."""
+        with self._lock:
+            if self._conn is None:
+                raise GroupProcessError(
+                    f"group {self.group_id} worker process is shut down")
+            try:
+                self._ensure_ready()
+                _send(self._conn, (kind, payload))
+                if timeout is not None and not self._conn.poll(timeout):
+                    raise GroupProcessError(
+                        f"group {self.group_id} worker process did not "
+                        f"reply to {kind!r} within {timeout}s")
+                status, value, extra = _recv(self._conn)
+            except (EOFError, OSError) as e:
+                self._broken = True
+                raise GroupProcessError(
+                    f"group {self.group_id} worker process died "
+                    f"(pid {self.pid()}, exitcode "
+                    f"{None if self._proc is None else self._proc.exitcode}) "
+                    f"during {kind!r}") from e
+        if status == "err":
+            err = RuntimeError(f"[group {self.group_id} process] {value}")
+            err.remote_traceback = extra
+            if extra:
+                logger.debug("group %d remote traceback:\n%s",
+                             self.group_id, extra)
+            raise err
+        return value, extra
+
+    def ping(self, timeout: float = 5.0) -> Optional[float]:
+        """Liveness heartbeat: round-trip latency in seconds, or None when
+        the child is alive but busy executing (the protocol lock is held by
+        a dispatch thread). Raises :class:`GroupProcessError` when dead."""
+        if not self.alive():
+            raise GroupProcessError(
+                f"group {self.group_id} worker process is not alive "
+                f"(exitcode {None if self._proc is None else self._proc.exitcode})")
+        if not self._lock.acquire(timeout=timeout):
+            return None                # mid-execute: occupied, not dead
+        try:
+            nonce = next(_nonce)
+            t0 = time.monotonic()
+            value, _ = self.call("ping", nonce, timeout=timeout)
+            if value != nonce:
+                raise GroupProcessError(
+                    f"group {self.group_id}: heartbeat nonce mismatch")
+            return time.monotonic() - t0
+        finally:
+            self._lock.release()
+
+    # --------------------------------------------------------- deployments
+    def create_deployment(self, spec, factory: Optional[str] = None) -> None:
+        payload = {"spec": spec,
+                   "factory": factory if factory is not None
+                   else self.wpg_factory}
+        self.call("create_deployment", payload)
+        self._deployments[spec.deployment_id] = payload
+
+    def drop_deployment(self, dep_id: str) -> None:
+        self._deployments.pop(dep_id, None)
+        try:
+            self.call("drop_deployment", {"dep": dep_id})
+        except GroupProcessError:
+            pass                       # dead child holds nothing to drop
+
+    # ------------------------------------------------- shutdown / respawn
+    def shutdown(self, timeout: float = 10.0) -> None:
+        """Graceful stop (protocol shutdown + join), escalating to
+        terminate/kill. Safe to call twice and on a dead child."""
+        proc = self._proc
+        if proc is None:
+            return
+        if proc.is_alive() and self._lock.acquire(timeout=timeout):
+            try:
+                _send(self._conn, ("shutdown", None))
+                if self._conn.poll(timeout):
+                    _recv(self._conn)
+            except (EOFError, OSError):
+                pass
+            finally:
+                self._lock.release()
+        proc.join(timeout=timeout)
+        self._terminate()
+
+    def _terminate(self) -> None:
+        proc, conn = self._proc, self._conn
+        self._proc = self._conn = None
+        self._ready = False
+        if conn is not None:
+            try:
+                conn.close()
+            except OSError:
+                pass
+        if proc is not None:
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=5.0)
+            if proc.is_alive():
+                proc.kill()
+                proc.join(timeout=5.0)
+
+    def respawn(self) -> None:
+        """Replace a dead (or wedged) worker process in place: fresh
+        process on the same handle, registered deployments replayed, so
+        existing :class:`WPGProxy` objects stay valid. Managed state is
+        LOST — device-failure semantics; jobs re-init or restore from a
+        checkpoint. Billing survives in the parent-side ExecLog mirrors."""
+        with self._lock:
+            self._terminate()
+            self.start()
+            for payload in self._deployments.values():
+                self.call("create_deployment", payload)
+
+
+class StateManagerProxy:
+    """Parent-side view of a group process's StateManager: the narrow
+    surface the Router's transition / teardown / retire / migration code
+    reads, forwarded over the pipe. ``mesh_slice`` is the PARENT's leased
+    slice (domain maps and env derivation); the authoritative entry table
+    lives in the child.
+
+    Lifecycle calls (``keys_for`` / ``unregister`` / ``entries``) tolerate
+    a dead child — teardown of a crashed group must complete, not raise —
+    while dispatch-path stats stay strict so a dead group fails ops fast
+    (and the failure poisons dependents through the normal path)."""
+
+    def __init__(self, gp: GroupProcess, mesh_slice=None,
+                 node_id: Optional[str] = None):
+        self.gp = gp
+        self.mesh_slice = mesh_slice
+        self.node_id = node_id or gp.node_id
+        self.last_migrate: Optional[Dict[str, Any]] = None
+
+    # ------------------------------------------------- dispatch-path stats
+    def job_bytes(self, job_id: str) -> int:
+        return self.gp.call("job_bytes", {"job": job_id})[0]
+
+    def load_time_estimate(self, nbytes: int) -> float:
+        return self.gp.call("load_estimate", {"nbytes": int(nbytes)})[0]
+
+    def offload_time_estimate(self, nbytes: int) -> float:
+        return self.gp.call("offload_estimate", {"nbytes": int(nbytes)})[0]
+
+    # ----------------------------------------------------------- lifecycle
+    def keys_for(self, job_id: str, prefix=None) -> List[str]:
+        try:
+            return self.gp.call("keys_for",
+                                {"job": job_id, "prefix": prefix})[0]
+        except GroupProcessError:
+            return []
+
+    def unregister(self, keys) -> None:
+        keys = list(keys)
+        if not keys:
+            return
+        try:
+            self.gp.call("unregister", {"keys": keys})
+        except GroupProcessError:
+            logger.warning("group %d process dead; dropping unregister of "
+                           "%d keys", self.gp.group_id, len(keys))
+
+    @property
+    def entries(self) -> Dict[str, None]:
+        """Key view only (truthiness + key iteration — what retire_group
+        reads); per-entry tier state never leaves the child."""
+        try:
+            return dict.fromkeys(self.gp.call("all_keys", None)[0])
+        except GroupProcessError:
+            return {}
+
+    # ----------------------------------------------------------- migration
+    def migrate(self, job_id: str, dst: "StateManagerProxy",
+                max_inline_bytes: int = 64 << 20) -> int:
+        """Cross-process migration: export in the source child (host-staged
+        arrays; entries above ``max_inline_bytes`` spill to the disk tier
+        and travel by path), import in the destination child (re-laid-out
+        on ITS slice), then drop the source copy. Transactional like the
+        in-process path: a failed import leaves the source the sole owner
+        (``import_state`` rolls back its staged entries)."""
+        if not isinstance(dst, StateManagerProxy):
+            raise RuntimeError(
+                "process-plane migration needs both groups in process mode")
+        t0 = time.monotonic()
+        payload, _ = self.gp.call(
+            "migrate_export", {"job": job_id, "max_inline": max_inline_bytes})
+        moved, _ = dst.gp.call("migrate_import", {"payload": payload})
+        self.gp.call("drop_job_state", {"job": job_id})
+        cross = (self.mesh_slice is not None and dst.mesh_slice is not None
+                 and self.mesh_slice.devices != dst.mesh_slice.devices)
+        self.last_migrate = {"bytes": moved,
+                             "seconds": time.monotonic() - t0,
+                             "cross_mesh": cross,
+                             "keys": len(payload["entries"])}
+        return moved
+
+
+class WPGProxy:
+    """What ``Router.wpgs[dep]`` holds in process mode. Forwards the WPG
+    surface over the group's pipe so every Router code path — dispatch,
+    context switching, teardown, billing, migration rehome — runs
+    unchanged against it."""
+
+    def __init__(self, spec, sm: StateManagerProxy):
+        from repro.core.worker import ExecLog   # parent side: jax is up
+        self.spec = spec
+        self._sm = sm
+        # LOCAL billing mirror: append-on-completion means a child crash
+        # cannot lose entries for ops that already finished (conservation)
+        self.exec_log = ExecLog()
+        sm.gp.create_deployment(spec)
+
+    # ----------------------------------------------------------- bindings
+    @property
+    def gp(self) -> GroupProcess:
+        return self._sm.gp
+
+    @property
+    def job_prefix(self) -> str:
+        return f"{self.spec.job_id}:{self.spec.deployment_id}"
+
+    @property
+    def mesh_slice(self):
+        return self._sm.mesh_slice
+
+    @property
+    def sm(self) -> StateManagerProxy:
+        return self._sm
+
+    @sm.setter
+    def sm(self, new_sm: StateManagerProxy):
+        """Migration rehome (``Router.migrate_job`` does ``wpg.sm = dst``):
+        re-create the deployment's WPG in the destination child — its
+        StateManager already holds the imported entries under the same
+        keys — and drop the source child's object."""
+        if new_sm is self._sm:
+            return
+        old_gp = self._sm.gp
+        new_sm.gp.create_deployment(self.spec)
+        if new_sm.gp is not old_gp:
+            old_gp.drop_deployment(self.spec.deployment_id)
+        self._sm = new_sm
+
+    # ------------------------------------------------------- WPG protocol
+    def resident(self) -> bool:
+        return self.gp.call("resident", {"dep": self.spec.deployment_id})[0]
+
+    def ensure_resident(self) -> float:
+        return self.gp.call("ensure_resident",
+                            {"dep": self.spec.deployment_id})[0]
+
+    def offload(self, to=None) -> float:
+        tier = 1 if to is None else int(to)
+        return self.gp.call("offload", {"dep": self.spec.deployment_id,
+                                        "tier": tier})[0]
+
+    def execute(self, qop):
+        """Proxy one admitted op into the child. The caller (Router
+        dispatch) already spliced future args, so everything shipped is
+        plain data. SYNC_WEIGHTS carries a WPG argument: same-child targets
+        go as a dep-id marker; cross-child targets are orchestrated here
+        as sync_export (source child, host numpy) + store_params (target
+        child, device_put on its own shardings)."""
+        args = tuple(qop.args)
+        if qop.op.value == "sync_weights" and args \
+                and isinstance(args[0], WPGProxy):
+            target = args[0]
+            if target.gp is not self.gp:
+                return self._sync_cross_process(target)
+            args = (("__dep__", target.spec.deployment_id),) + args[1:]
+        payload = {"dep": qop.deployment_id, "req_id": qop.req_id,
+                   "job_id": qop.job_id, "op": qop.op.value,
+                   "args": args, "kwargs": dict(qop.kwargs)}
+        try:
+            result, entry = self.gp.call("execute", payload)
+        except GroupProcessError as e:
+            raise RuntimeError(
+                f"group {self.gp.group_id} worker process died executing "
+                f"op {qop.req_id} ({qop.op.value})") from e
+        if entry is not None:
+            self.exec_log.append(tuple(entry))
+        return result
+
+    def _sync_cross_process(self, target: "WPGProxy"):
+        t0 = time.monotonic()
+        tree, _ = self.gp.call("sync_export",
+                               {"dep": self.spec.deployment_id})
+        target.gp.call("store_params",
+                       {"dep": target.spec.deployment_id, "tree": tree})
+        synced = self._sm.job_bytes(self.job_prefix)
+        self.exec_log.append(("sync_weights", time.monotonic() - t0))
+        return {"synced_bytes": synced}
+
+    # ------------------------------------------------------------ teardown
+    def close(self) -> None:
+        """Drop the child-side WPG object (Router.teardown calls this after
+        the managed state is unregistered)."""
+        self.gp.drop_deployment(self.spec.deployment_id)

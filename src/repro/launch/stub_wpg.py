@@ -1,0 +1,83 @@
+"""Spawnable stub WorkerProcessGroup for process-plane tests and benches.
+
+Lives under ``src/`` (not ``benchmarks/`` or ``tests/``) because spawned
+group processes must be able to import the factory by name — the pipe
+carries ``"repro.launch.stub_wpg:make_busy_wpg"``, never a pickled
+callable. ``needs_state_manager = False`` keeps the child jax-free (the
+process plane gives it a ``_LiteSM``), so a stub group spawns fast.
+
+Per-op kwargs drive behaviour:
+
+- ``busy_s``   — burn CPU for that long (pure-Python loop, so a THREAD
+  worker holds the GIL: this is what makes the thread-vs-process overlap
+  comparison honest)
+- ``sleep_s``  — blocking sleep (releases the GIL; models device-bound
+  work in thread mode)
+- ``crash``    — hard-exit the worker process mid-op (``os._exit``), the
+  robustness-test stand-in for a device/process failure
+- ``fail``     — raise inside ``execute`` (a remote op error, not a death)
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict
+
+
+class BusyWPG:
+    """Minimal WPG protocol surface, compute-bound on demand."""
+
+    needs_state_manager = False
+
+    def __init__(self, spec, sm):
+        self.spec = spec
+        self.sm = sm
+        self.exec_log: list = []
+        self._resident = True
+
+    @property
+    def job_prefix(self) -> str:
+        return f"{self.spec.job_id}:{self.spec.deployment_id}"
+
+    def resident(self) -> bool:
+        return self._resident
+
+    def ensure_resident(self) -> float:
+        self._resident = True
+        return 0.0
+
+    def offload(self, to=None) -> float:
+        self._resident = False
+        return 0.0
+
+    def execute(self, qop) -> Dict[str, Any]:
+        t0 = time.monotonic()
+        kw = qop.kwargs
+        if kw.get("crash"):
+            os._exit(43)
+        if kw.get("fail"):
+            raise RuntimeError(f"stub op {qop.req_id} asked to fail")
+        busy = float(kw.get("busy_s", 0.0))
+        if busy > 0.0:
+            # pure-Python spin against THREAD CPU time, not wall clock: a
+            # GIL-starved thread must take proportionally longer wall time
+            # (a wall deadline would let contended threads "finish" on
+            # schedule having done less work, faking overlap)
+            deadline = time.thread_time() + busy
+            x = 0
+            while time.thread_time() < deadline:
+                x += 1
+        sleep = float(kw.get("sleep_s", 0.0))
+        if sleep > 0.0:
+            time.sleep(sleep)
+        dt = time.monotonic() - t0
+        self.exec_log.append((qop.op.value, dt))
+        return {"op": qop.op.value, "req_id": qop.req_id, "pid": os.getpid(),
+                "seconds": dt}
+
+
+def make_busy_wpg(spec, sm) -> BusyWPG:
+    return BusyWPG(spec, sm)
+
+
+make_busy_wpg.needs_state_manager = False

@@ -224,6 +224,24 @@ def test_timeout_bounds_call_even_with_hung_op():
     assert time.monotonic() - t0 < 2.5   # 0.2s deadline + 1s grace + slack
 
 
+def test_abandoned_worker_is_tracked_not_silently_leaked():
+    """Regression: the abandon grace used to drop the hung worker's handle
+    on the floor — the thread leaked invisibly and nothing ever reported
+    it. Now run_until_idle records it, abandoned_workers() names it while
+    the hung op runs, and the entry self-prunes once the op returns."""
+    r, specs, _ = make_router(n_groups=1, duration=2.0)
+    r.submit_queued_operation(api.make_op(specs[0], api.Op.FORWARD, 0))
+    with pytest.raises(TimeoutError, match="stuck"):
+        r.run_until_idle(timeout=0.2)
+    names = r.abandoned_workers()
+    assert names and names[0].startswith("dispatch-g0")
+    # once the stuck execute returns, the daemon exits and the report drains
+    deadline = time.monotonic() + 10.0
+    while r.abandoned_workers() and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert r.abandoned_workers() == []
+
+
 def test_serial_driver_also_poisons_dependents():
     r, specs, _ = make_router(n_groups=1, duration=0.0)
     spec = specs[0]
