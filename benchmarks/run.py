@@ -4,7 +4,7 @@ Prints ``name,value,derived`` CSV and writes a machine-readable
 ``BENCH_<pr>.json`` (row name -> {value, units}) so the performance
 trajectory is tracked across PRs. Run:
 
-    PYTHONPATH=src python -m benchmarks.run [--json BENCH_PR9.json]
+    PYTHONPATH=src python -m benchmarks.run [--json BENCH_PR10.json]
 """
 from __future__ import annotations
 
@@ -13,7 +13,7 @@ import json
 import sys
 import time
 
-BENCH_JSON = "BENCH_PR9.json"
+BENCH_JSON = "BENCH_PR10.json"
 
 
 def write_bench_json(rows: list, path: str) -> None:
@@ -40,6 +40,7 @@ def main() -> None:
     import benchmarks.hrrs_bench as hrrsb
     import benchmarks.mesh_bench as meshb
     import benchmarks.roofline as roofline
+    import benchmarks.transport_bench as transportb
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=BENCH_JSON,
@@ -55,6 +56,7 @@ def main() -> None:
         ("hrrs_bench", hrrsb),
         ("mesh_bench", meshb),
         ("roofline", roofline),
+        ("transport_bench", transportb),
     ]
     print("name,value,derived")
     failed = []

@@ -1,0 +1,127 @@
+"""Pickle-vs-shm transport roundtrip and the measured crossover (PR 10).
+
+The measured roundtrip is the process plane's heaviest path: a cross-child
+``sync_weights`` relay — source child exports its params, the parent
+forwards them to the destination child, the destination stores them and
+acks. Two stub worker-process pairs run the IDENTICAL protocol
+(``sync_export`` → ``store_params`` → release), differing only in
+transport: the pickle pair (``shm=False``) hauls every byte through the
+pipe twice (reply + relayed request, each pickled, chunked through the
+kernel, unpickled), while the shm pair writes the bytes once into the
+source child's pooled segment and relays 100-byte descriptors — the
+destination copies straight out of the mapped views. Param trees are
+cached child-side per size, so timed reps measure the transport, not
+``np.arange``.
+
+Rows:
+
+- ``transport/{pickle,shm}_roundtrip_ms_{1,16,64,256}mib`` — one-host
+  relay roundtrip per payload size (min over reps; the derived column on
+  shm rows shows the speedup)
+- ``transport/crossover_kib`` — smallest swept payload where the shm path
+  beats pickle; ``shm_transport.DEFAULT_THRESHOLD`` is set from this
+  measurement (with headroom for descriptor/ack overhead on trees of many
+  small arrays)
+"""
+from __future__ import annotations
+
+import time
+
+SIZES_MIB = (1, 16, 64, 256)
+SWEEP_KIB = (8, 16, 32, 64, 128, 256, 512, 1024)
+STUB = "repro.launch.stub_wpg:make_busy_wpg"
+
+
+class _Pair:
+    """Source + destination worker process sharing a transport mode, with
+    one deployment per payload size on each side."""
+
+    def __init__(self, base_gid: int, shm: bool):
+        from repro.launch.proc_plane import GroupProcess
+        self.src = GroupProcess(base_gid, wpg_factory=STUB, shm=shm,
+                                shm_threshold=1 << 10,
+                                node_id=f"tbench-src{base_gid}")
+        self.dst = GroupProcess(base_gid + 1, wpg_factory=STUB, shm=shm,
+                                shm_threshold=1 << 10,
+                                node_id=f"tbench-dst{base_gid}")
+        self._deps = {}
+
+    def _dep_for(self, kib: int) -> str:
+        dep = self._deps.get(kib)
+        if dep is None:
+            from repro.core import api
+            dep = f"d{kib}"
+            for gp in (self.src, self.dst):
+                gp.create_deployment(api.DeploymentSpec(
+                    deployment_id=dep, job_id="bench", model_name="stub",
+                    role="train", overrides=(("sync_kib", kib),)))
+            self._deps[kib] = dep
+        return dep
+
+    def sync_roundtrip_ms(self, kib: int, reps: int) -> float:
+        """One cross-child weight sync, exactly as WPGProxy relays it."""
+        from repro.launch import shm_transport as shmt
+        dep = self._dep_for(kib)
+        best = float("inf")
+        for i in range(reps + 1):           # +1 warm: arange + segment alloc
+            t0 = time.perf_counter()
+            tree, _ = self.src.call("sync_export", {"dep": dep},
+                                    decode_reply=False)
+            segs = shmt.refs_in(tree)
+            try:
+                self.dst.call("store_params", {"dep": dep, "tree": tree})
+            finally:
+                self.src.release_segments(segs)
+            dt = time.perf_counter() - t0
+            if i > 0:
+                best = min(best, dt)
+        # the landed params must checksum: this is a transfer, not a timer
+        n = (kib << 10) // 4
+        got, _ = self.dst.call("execute", {
+            "dep": dep, "req_id": 0, "job_id": "bench", "op": "forward",
+            "args": (), "kwargs": {"stored_sum": True}})
+        assert got["stored_sum"] == float(n * (n - 1) // 2), kib
+        return best * 1e3
+
+    def close(self):
+        self.src.shutdown()
+        self.dst.shutdown()
+
+
+def run():
+    from repro.launch import shm_transport as shmt
+
+    if not shmt.shm_available():
+        return [("transport/shm_available", 0, "no shm: bench skipped")]
+
+    pkl = _Pair(90, shm=False)
+    shm = _Pair(92, shm=True)
+    rows = [("transport/shm_available", 1, "")]
+    try:
+        for mib in SIZES_MIB:
+            reps = 3 if mib >= 64 else 6
+            t_pkl = pkl.sync_roundtrip_ms(mib << 10, reps)
+            t_shm = shm.sync_roundtrip_ms(mib << 10, reps)
+            rows.append((f"transport/pickle_roundtrip_ms_{mib}mib",
+                         round(t_pkl, 3), f"{mib} MiB sync relay, pipe"))
+            rows.append((f"transport/shm_roundtrip_ms_{mib}mib",
+                         round(t_shm, 3),
+                         f"{t_pkl / t_shm:.1f}x vs pickle"))
+        crossover = None
+        for kib in SWEEP_KIB:
+            t_pkl = pkl.sync_roundtrip_ms(kib, 12)
+            t_shm = shm.sync_roundtrip_ms(kib, 12)
+            if crossover is None and t_shm < t_pkl:
+                crossover = kib
+        rows.append(("transport/crossover_kib",
+                     -1 if crossover is None else crossover,
+                     f"DEFAULT_THRESHOLD={shmt.DEFAULT_THRESHOLD >> 10} KiB"))
+    finally:
+        pkl.close()
+        shm.close()
+    return rows
+
+
+if __name__ == "__main__":
+    for name, value, derived in run():
+        print(f"{name},{value},{derived}")

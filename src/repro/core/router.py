@@ -65,7 +65,9 @@ class Router:
                  device_plane: Optional[DevicePlane] = None,
                  devices_per_group: Optional[int] = None,
                  process_plane: bool = False,
-                 proc_wpg_factory: Optional[str] = None):
+                 proc_wpg_factory: Optional[str] = None,
+                 shm_transport: Optional[bool] = None,
+                 shm_threshold: Optional[int] = None):
         """``process_plane=True`` hosts each node group's WPGs in a separate
         OS process bound to the group's mesh slice (launch/proc_plane.py):
         dispatch crosses an IPC pipe instead of a method call, so groups on
@@ -74,10 +76,18 @@ class Router:
         to the pre-process-plane plane — including VirtualClock replay.
         ``proc_wpg_factory`` names the child-side factory as
         "module:callable" (factories cross the spawn boundary by name, not
-        pickle); None means the real WorkerProcessGroup."""
+        pickle); None means the real WorkerProcessGroup.
+
+        ``shm_transport`` controls the process plane's zero-copy
+        shared-memory array transport (launch/shm_transport.py): None
+        auto-enables it where the host supports it, False forces the
+        pickle path. ``shm_threshold`` overrides the per-array size above
+        which arrays ride shm (default: the measured crossover)."""
         self.now = now
         self.process_plane = process_plane
         self.proc_wpg_factory = proc_wpg_factory
+        self.shm_transport = shm_transport
+        self.shm_threshold = shm_threshold
         self.group_procs: Dict[int, GroupProcess] = {}
         # dispatch workers hung inside wpg.execute past their abandon grace
         # (daemon threads we can't kill) — reported, never silently dropped
@@ -146,7 +156,9 @@ class Router:
         gp = GroupProcess(group_id, env=env_for_slice(sl),
                           slice_index=sl.index,
                           wpg_factory=self.proc_wpg_factory,
-                          node_id=f"group{group_id}")
+                          node_id=f"group{group_id}",
+                          shm=self.shm_transport,
+                          shm_threshold=self.shm_threshold)
         self.group_procs[group_id] = gp
         return StateManagerProxy(gp, mesh_slice=sl,
                                  node_id=f"group{group_id}")
@@ -635,7 +647,11 @@ class Router:
         """Respawn every dead group worker process in place (deployments
         replayed; managed state lost — device-failure semantics). Called by
         the capacity adjuster each poll; returns the respawned group ids.
-        A no-op in thread mode, so VirtualClock replay never sees it."""
+        A no-op in thread mode, so VirtualClock replay never sees it.
+        Each respawn first reaps the dead incarnation's in-flight shm
+        segments (by name prefix) and sweeps its orphaned ``export__*``
+        migration spill files, so a crash-looping group never accretes
+        ``/dev/shm`` or ``/tmp`` residue (see ``GroupProcess.respawn``)."""
         respawned: List[int] = []
         for gid, gp in list(self.group_procs.items()):
             if not gp.alive():

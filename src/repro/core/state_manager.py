@@ -368,12 +368,25 @@ class StateManager:
         jax arrays cannot cross a pipe — and entries larger than
         ``max_inline_bytes`` spill to a fresh disk-tier file and travel by
         absolute path instead (same host, so the importer reads it
-        directly). bf16 travels as uint16 views (numpy pickles those;
-        ml_dtypes scalars it may not), PartitionSpecs as plain tuples.
-        Non-destructive: the source keeps its entries until the importer
-        has committed and the caller drops them."""
+        directly). With the shm transport active the caller disables this
+        tier (``max_inline_bytes`` huge): inline arrays ride shared-memory
+        descriptors instead, which beats the double disk pass. bf16
+        travels as uint16 views (numpy pickles those; ml_dtypes scalars it
+        may not), PartitionSpecs as plain tuples. Non-destructive: the
+        source keeps its entries until the importer has committed and the
+        caller drops them.
+
+        Spill files are TRANSACTION-SCOPED: names carry a fresh transfer
+        id (``export__{txn}__...``), the payload lists them under
+        ``"spills"``, and exactly one party deletes them — the importer on
+        commit AND on rollback (:meth:`import_state`), or the caller when
+        the importer died before running (``StateManagerProxy.migrate``);
+        ``respawn_dead_groups`` sweeps anything a crash orphaned."""
+        import uuid
         keys = list(self.keys_for(job_id))
+        txn = uuid.uuid4().hex[:12]
         entries = []
+        spills: List[str] = []
         total = 0
         t0 = self.clock()
         for k in keys:
@@ -394,16 +407,19 @@ class StateManager:
             wire = arr.view(np.uint16) if is_bf16 else arr
             if arr.nbytes > max_inline_bytes:
                 os.makedirs(self.disk_dir, exist_ok=True)
-                path = os.path.join(self.disk_dir,
-                                    "export__" + k.replace("/", "__") + ".npy")
+                path = os.path.join(
+                    self.disk_dir,
+                    f"export__{txn}__" + k.replace("/", "__") + ".npy")
                 np.save(path, wire)
                 ent["path"] = path
+                spills.append(path)
             else:
                 ent["data"] = wire
             entries.append(ent)
             total += e.nbytes
         self._record("migrate", total, self.clock() - t0)
-        return {"job_id": job_id, "entries": entries, "bytes": total}
+        return {"job_id": job_id, "entries": entries, "bytes": total,
+                "txn": txn, "spills": spills}
 
     def import_state(self, payload: Dict[str, Any]) -> int:
         """Adopt an :meth:`export_state` payload into THIS manager.
@@ -411,17 +427,18 @@ class StateManager:
         slice with their recorded spec; HOST/DISK exports arrive HOST.
         Transactional like :meth:`migrate`: a mid-import failure removes
         every staged entry before re-raising, leaving the (untouched)
-        exporter the sole owner. Spill files are consumed (unlinked) only
-        on success."""
+        exporter the sole owner. The transaction also owns the exporter's
+        spill files: consumed (unlinked) on success AND on rollback —
+        either way the transfer is over and nobody will read them again."""
         t0 = self.clock()
         staged: List[str] = []
-        spills: List[str] = []
+        spills = [p for p in payload.get("spills", ())
+                  if p and os.path.basename(p).startswith("export__")]
         moved = 0
         try:
             for ent in payload["entries"]:
                 if ent["path"] is not None:
                     arr = np.load(ent["path"])
-                    spills.append(ent["path"])
                 else:
                     arr = ent["data"]
                 if ent["is_bf16"]:
@@ -432,7 +449,12 @@ class StateManager:
                     ref = self._to_device(arr, spec)
                     tier, spec = Tier.DEVICE, self._leaf_spec(ref)
                 else:
-                    ref, tier = np.asarray(arr), Tier.HOST
+                    # HOST entries must own their buffer: ``arr`` may be a
+                    # view over a pooled shm segment that is recycled the
+                    # moment this import's reply acks the transfer
+                    arr = np.asarray(arr)
+                    ref = arr if arr.base is None else np.array(arr)
+                    tier = Tier.HOST
                 self.entries[ent["key"]] = Entry(
                     key=ent["key"], tier=tier, nbytes=ent["nbytes"],
                     ref=ref, version=ent["version"],
@@ -442,6 +464,9 @@ class StateManager:
         except Exception:
             for k in staged:     # rollback: the exporter still owns the state
                 self.entries.pop(k, None)
+            for path in spills:  # transfer dead — spills will never be read
+                if os.path.exists(path):
+                    os.unlink(path)
             raise
         for path in spills:
             if os.path.exists(path):

@@ -27,6 +27,7 @@ contract is untouched.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -93,6 +94,20 @@ def env_for_slice(sl: MeshSlice) -> Dict[str, str]:
                     f"--xla_force_host_platform_device_count={sl.n_devices}"}
     ids = ",".join(str(i) for i in sl.device_ids())
     return {"CUDA_VISIBLE_DEVICES": ids, "JAX_VISIBLE_DEVICES": ids}
+
+
+def host_shm_bytes(path: str = "/dev/shm") -> Optional[int]:
+    """Free bytes in the host's POSIX shared-memory filesystem, or ``None``
+    where it doesn't exist (macOS, some containers). The process plane's
+    shm transport sizes its segment pools against this: tmpfs defaults to
+    half of RAM, and a container run with a small ``--shm-size`` will make
+    ``shm_transport.shm_available()`` fall back to pipe pickling rather
+    than fail mid-transfer."""
+    try:
+        st = os.statvfs(path)
+    except OSError:
+        return None
+    return st.f_bavail * st.f_frsize
 
 
 class DevicePlane:

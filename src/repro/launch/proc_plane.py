@@ -35,13 +35,29 @@ Pieces
 The parent thread blocking in ``recv`` releases the GIL, so per-group
 dispatch threads proxying into different children genuinely overlap.
 
+Array transport (PR 10): large arrays in requests and replies do NOT
+travel through the pipe. Each side owns a :class:`~repro.launch.
+shm_transport.Transport` — a pooled ``multiprocessing.shared_memory``
+writer plus an attachment cache for the peer's segments — and the pipe
+carries :class:`~repro.launch.shm_transport.ShmRef` descriptors instead of
+bytes. Release protocol: a reply is the consumption ack for the request's
+segments (handlers block on ``device_put`` before replying); reply
+segments are acked by an explicit fire-and-forget ``shm_release`` frame
+from the parent. Cross-child payloads (sync / migrate) are RELAYED: the
+parent forwards the source child's descriptors to the destination child
+untouched — the bytes are written once and read once, both in children —
+and releases them to the source only after the destination's reply. A
+dead child's segments are reaped by prefix during terminate/respawn.
+
 This module imports ONLY the stdlib at module level: a spawned child
 imports it before applying its device environment, so any transitive jax
 import here would bind the child to the parent's device world. jax-touching
-imports (worker, state_manager, mesh) happen lazily, after the env is set.
+imports (worker, state_manager, mesh) happen lazily, after the env is set
+(``shm_transport`` is stdlib-only at module level for the same reason).
 """
 from __future__ import annotations
 
+import glob
 import importlib
 import itertools
 import logging
@@ -55,10 +71,17 @@ import time
 import traceback
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.launch import shm_transport as shmt
+
 logger = logging.getLogger(__name__)
 
 _LEN = struct.Struct("!I")
 _nonce = itertools.count(1)
+
+# request kinds whose decoded arrays may stay VIEWS over shared segments:
+# their handlers consume (device_put + block, or explicit copy) before
+# replying, which is what lets the reply double as the release ack
+_VIEW_KINDS = frozenset({"store_params", "migrate_import"})
 
 
 class GroupProcessError(RuntimeError):
@@ -67,23 +90,47 @@ class GroupProcessError(RuntimeError):
 
 # ------------------------------------------------------------ wire format
 def _send(conn, obj) -> None:
-    """One frame: a 4-byte big-endian length prefix + the pickled message.
-    ``send_bytes`` keeps the frame atomic on the pipe; the explicit prefix
-    lets the receiver reject a truncated or corrupted frame instead of
-    unpickling garbage."""
+    """One logical frame = two pipe messages: a 4-byte big-endian length
+    prefix, then the pickled body. The explicit prefix lets the receiver
+    reject a truncated or corrupted frame instead of unpickling garbage;
+    sending it as its own message (rather than prepending it to the body)
+    means the multi-MiB pickle buffer is never copied a second time just
+    to gain 4 leading bytes. The protocol is strictly serial per channel,
+    so the two messages cannot interleave with another frame."""
     buf = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
-    conn.send_bytes(_LEN.pack(len(buf)) + buf)
+    conn.send_bytes(_LEN.pack(len(buf)))
+    conn.send_bytes(buf)
 
 
 def _recv(conn):
-    raw = conn.recv_bytes()
-    if len(raw) < _LEN.size:
-        raise EOFError("truncated frame (no length prefix)")
-    (n,) = _LEN.unpack_from(raw)
-    if len(raw) - _LEN.size != n:
+    hdr = conn.recv_bytes()
+    if len(hdr) != _LEN.size:
+        raise EOFError("truncated frame (bad length prefix)")
+    (n,) = _LEN.unpack(hdr)
+    # recv_bytes hands back exactly one message — no prefix slice, so no
+    # second traversal of the body either (the old path copied the whole
+    # buffer once to strip 4 bytes)
+    body = conn.recv_bytes()
+    if len(body) != n:
         raise EOFError(
-            f"frame length mismatch: prefix says {n}, got {len(raw) - _LEN.size}")
-    return pickle.loads(raw[_LEN.size:])
+            f"frame length mismatch: prefix says {n}, got {len(body)}")
+    return pickle.loads(body)
+
+
+def _unlink_spills(payload) -> List[str]:
+    """Delete a migrate-export payload's transfer-scoped spill files (only
+    ``export__``-named ones — never regular disk-tier state). Idempotent:
+    an importer that already consumed some is fine."""
+    removed = []
+    for ent in payload.get("entries", ()):
+        path = ent.get("path")
+        if path and os.path.basename(path).startswith("export__"):
+            try:
+                os.unlink(path)
+                removed.append(path)
+            except OSError:
+                pass
+    return removed
 
 
 def _resolve_factory(ref: Optional[str]):
@@ -113,6 +160,22 @@ def _to_host(obj):
         return np.asarray(jax.device_get(x)) if isinstance(x, jax.Array) else x
 
     return jax.tree.map(conv, obj)
+
+
+def _own_arrays(obj):
+    """Copy any array leaf that does not own its buffer (shm views after a
+    ``decode(copy=False)``) so the consumer can retain the tree after the
+    segment is released. No-op on owning arrays and non-array leaves."""
+    if "numpy" not in sys.modules:
+        return obj
+    import numpy as np
+
+    def conv(x):
+        if isinstance(x, np.ndarray) and x.base is not None:
+            return np.array(x)
+        return x
+
+    return shmt._walk(obj, conv)
 
 
 # ------------------------------------------------------------- child side
@@ -229,8 +292,16 @@ class _ChildState:
         shardings = wpg.param_shardings() \
             if hasattr(wpg, "param_shardings") else None
         if shardings is not None:
+            # the zero-copy landing: device_put reads STRAIGHT from the
+            # mapped shm views; block before replying, because the reply
+            # is the ack that lets the writer recycle the segment
             import jax
             tree = jax.tree.map(jax.device_put, tree, shardings)
+            tree = jax.block_until_ready(tree)
+        else:
+            # host-retained params (stub/host-only WPGs) must not keep
+            # views over a segment about to be recycled
+            tree = _own_arrays(tree)
         wpg._store(params=tree)
         return None, None
 
@@ -267,7 +338,22 @@ class _ChildState:
 
     def _h_migrate_import(self, p):
         sm = self._state_manager(True)
-        return sm.import_state(p["payload"]), None
+        payload = p["payload"]
+        moved = sm.import_state(payload)
+        # entries that landed DEVICE were device_put directly from shm
+        # views (import_state copies host-retained ones); drain the async
+        # puts before replying — the reply releases the source segments
+        if "jax" in sys.modules:
+            import jax
+            from repro.core.state_manager import Tier
+            refs = []
+            for ent in payload["entries"]:
+                e = sm.entries.get(ent["key"])
+                if e is not None and e.tier == Tier.DEVICE:
+                    refs.append(e.ref)
+            if refs:
+                jax.block_until_ready(refs)
+        return moved, None
 
     def _h_drop_job_state(self, p):
         sm = self.sm
@@ -283,42 +369,67 @@ def _group_main(conn, cfg: Dict[str, Any]) -> None:
     module keeps its own imports stdlib-only for exactly that reason)."""
     os.environ.update(cfg["env"])
     state = _ChildState(cfg)
+    shm_cfg = cfg.get("shm") or {}
+    transport = shmt.Transport(
+        prefix=shm_cfg.get("prefix", f"pxl{os.getpid()}c"),
+        enabled=bool(shm_cfg.get("enabled")),
+        threshold=int(shm_cfg.get("threshold", shmt.DEFAULT_THRESHOLD)))
     try:
         _send(conn, ("ready", os.getpid()))
     except OSError:
         return
-    while True:
-        try:
-            kind, payload = _recv(conn)
-        except (EOFError, OSError):
-            break                      # parent went away: exit with it
-        if kind == "shutdown":
+    try:
+        while True:
             try:
-                _send(conn, ("ok", None, None))
-            except OSError:
-                pass
-            break
-        if kind == "ping":
-            try:
-                _send(conn, ("ok", payload, None))
-            except OSError:
+                kind, payload = _recv(conn)
+            except (EOFError, OSError):
+                break                  # parent went away: exit with it
+            if kind == "shutdown":
+                try:
+                    _send(conn, ("ok", None, None))
+                except OSError:
+                    pass
                 break
-            continue
-        try:
-            result, extra = state.handle(kind, payload)
-            reply = ("ok", result, extra)
-        except BaseException as e:  # noqa: BLE001 - surface to the parent
-            reply = ("err", f"{type(e).__name__}: {e}",
-                     traceback.format_exc())
-        try:
-            _send(conn, reply)
-        except (OSError, pickle.PicklingError) as e:
-            # an unpicklable result must fail the one op, not kill the
-            # channel mid-frame protocol
+            if kind == "shm_release":
+                # fire-and-forget ack from the parent: the listed segments
+                # of OUR pool were consumed and may be recycled
+                transport.release(payload)
+                continue
+            if kind == "ping":
+                try:
+                    _send(conn, ("ok", payload, None))
+                except OSError:
+                    break
+                continue
+            reply_segs: List[str] = []
             try:
-                _send(conn, ("err", f"reply serialization failed: {e}", None))
-            except OSError:
-                break
+                if transport.enabled and shmt.has_refs(payload):
+                    # view-kind handlers consume before replying; every
+                    # other kind gets owning copies (results may be kept)
+                    payload = transport.decode(
+                        payload, copy=kind not in _VIEW_KINDS)
+                result, extra = state.handle(kind, payload)
+                result, reply_segs = transport.encode(result)
+                reply = ("ok", result, extra)
+            except BaseException as e:  # noqa: BLE001 - surface to parent
+                reply = ("err", f"{type(e).__name__}: {e}",
+                         traceback.format_exc())
+            try:
+                _send(conn, reply)
+            except (OSError, pickle.PicklingError) as e:
+                # an unpicklable result must fail the one op, not kill the
+                # channel mid-frame protocol; the parent never saw the
+                # descriptors, so the segments go straight back to the pool
+                transport.release(reply_segs)
+                try:
+                    _send(conn, ("err",
+                                 f"reply serialization failed: {e}", None))
+                except OSError:
+                    break
+    finally:
+        # graceful exit unlinks the child pool; after a CRASH this never
+        # runs and the parent reaps by prefix instead
+        transport.close()
 
 
 # ------------------------------------------------------------ parent side
@@ -338,12 +449,28 @@ class GroupProcess:
 
     def __init__(self, group_id: int, env: Optional[Dict[str, str]] = None,
                  slice_index: int = 0, wpg_factory: Optional[str] = None,
-                 node_id: Optional[str] = None, start: bool = True):
+                 node_id: Optional[str] = None, start: bool = True,
+                 shm: Optional[bool] = None,
+                 shm_threshold: Optional[int] = None):
+        """``shm=None`` auto-enables pooled shared-memory array transport
+        when the host supports it (``shm_transport.shm_available``);
+        ``False`` forces the pickle path. ``shm_threshold`` is the
+        per-array size (bytes) above which arrays ride shm — the default
+        is the measured pickle-vs-shm crossover (BENCH_PR10.json)."""
         self.group_id = group_id
         self.env = dict(env or {})
         self.slice_index = slice_index
         self.wpg_factory = wpg_factory
         self.node_id = node_id or f"group{group_id}-proc"
+        self.shm_enabled = (shmt.shm_available() if shm is None
+                            else bool(shm) and shmt.shm_available())
+        self.shm_threshold = (shmt.DEFAULT_THRESHOLD if shm_threshold is None
+                              else int(shm_threshold))
+        self._transport: Optional[shmt.Transport] = None
+        self._child_prefix = ""
+        # child segment names observed on this channel: the reap fallback
+        # where there is no scannable /dev/shm directory
+        self._seen_child_segs: set = set()
         self._lock = threading.RLock()
         self._conn = None
         self._proc = None
@@ -359,8 +486,20 @@ class GroupProcess:
     def start(self) -> None:
         ctx = multiprocessing.get_context("spawn")   # fork is unsafe: jax + threads
         parent_conn, child_conn = ctx.Pipe(duplex=True)
+        self.spawn_count += 1
+        # segment names carry (parent pid, group, incarnation, side) so a
+        # dead incarnation's leftovers are reapable by prefix and can never
+        # collide with its replacement's
+        base = f"pxl{os.getpid()}g{self.group_id}s{self.spawn_count}"
+        self._child_prefix = base + "c"
+        self._transport = shmt.Transport(prefix=base + "p",
+                                         enabled=self.shm_enabled,
+                                         threshold=self.shm_threshold)
         cfg = {"group_id": self.group_id, "env": self.env,
-               "slice_index": self.slice_index, "node_id": self.node_id}
+               "slice_index": self.slice_index, "node_id": self.node_id,
+               "shm": {"enabled": self.shm_enabled,
+                       "threshold": self.shm_threshold,
+                       "prefix": self._child_prefix}}
         proc = ctx.Process(target=_group_main, args=(child_conn, cfg),
                            name=f"plexrl-g{self.group_id}", daemon=True)
         proc.start()
@@ -368,7 +507,6 @@ class GroupProcess:
         self._conn, self._proc = parent_conn, proc
         self._ready = False
         self._broken = False
-        self.spawn_count += 1
 
     def _ensure_ready(self, timeout: float = 180.0) -> None:
         if self._ready:
@@ -394,25 +532,57 @@ class GroupProcess:
         return None if self._proc is None else self._proc.pid
 
     # ----------------------------------------------------------- protocol
-    def call(self, kind: str, payload=None, timeout: Optional[float] = None):
+    def call(self, kind: str, payload=None, timeout: Optional[float] = None,
+             decode_reply: bool = True):
         """One request/reply round trip. Returns ``(value, extra)``. A
         remote exception re-raises here as RuntimeError (with the child's
         traceback attached as ``remote_traceback``); a dead child or broken
-        channel raises :class:`GroupProcessError`."""
+        channel raises :class:`GroupProcessError`.
+
+        Large arrays in ``payload`` are staged through the parent's shm
+        pool (descriptors on the pipe); the child's reply is their
+        consumption ack. Reply arrays arrive as descriptors over the
+        child's pool: ``decode_reply=True`` materialises them (owning
+        copies) and acks the child; ``decode_reply=False`` hands back the
+        RAW encoded value for relaying to another child — the caller then
+        owns the release (:meth:`release_segments`)."""
+        tr = self._transport
+        req_segs: List[str] = []
         with self._lock:
             if self._conn is None:
                 raise GroupProcessError(
                     f"group {self.group_id} worker process is shut down")
             try:
                 self._ensure_ready()
+                if tr is not None and tr.enabled \
+                        and kind not in ("ping", "shutdown"):
+                    payload, req_segs = tr.encode(payload)
                 _send(self._conn, (kind, payload))
                 if timeout is not None and not self._conn.poll(timeout):
+                    # NOT released: a slow child may still read them; the
+                    # pool keeps them busy until destroy (leak-safe)
                     raise GroupProcessError(
                         f"group {self.group_id} worker process did not "
                         f"reply to {kind!r} within {timeout}s")
                 status, value, extra = _recv(self._conn)
+                # the reply acks the request's segments: view-kind handlers
+                # block on consumption before replying
+                if req_segs:
+                    tr.release(req_segs)
+                if tr is not None and decode_reply:
+                    reply_segs = shmt.refs_in(value)
+                    if reply_segs:
+                        self._seen_child_segs.update(reply_segs)
+                        try:
+                            value = tr.decode(value, copy=True)
+                        finally:
+                            self._release_locked(reply_segs)
+                elif tr is not None:
+                    self._seen_child_segs.update(shmt.refs_in(value))
             except (EOFError, OSError) as e:
                 self._broken = True
+                if req_segs:       # dead child: no reader can arrive
+                    tr.release(req_segs)
                 raise GroupProcessError(
                     f"group {self.group_id} worker process died "
                     f"(pid {self.pid()}, exitcode "
@@ -426,6 +596,25 @@ class GroupProcess:
                              self.group_id, extra)
             raise err
         return value, extra
+
+    def _release_locked(self, names: List[str]) -> None:
+        """Fire-and-forget ``shm_release`` to the child (lock held)."""
+        try:
+            _send(self._conn, ("shm_release", list(names)))
+        except OSError:
+            self._broken = True    # reaped by prefix at terminate/respawn
+
+    def release_segments(self, names) -> None:
+        """Ack child-pool segments consumed outside :meth:`call` (relayed
+        sync/migrate payloads). Tolerates a dead or shut-down child — its
+        leftovers are reaped by prefix instead."""
+        names = list(names)
+        if not names:
+            return
+        with self._lock:
+            if self._conn is None or self._broken:
+                return
+            self._release_locked(names)
 
     def ping(self, timeout: float = 5.0) -> Optional[float]:
         """Liveness heartbeat: round-trip latency in seconds, or None when
@@ -498,15 +687,58 @@ class GroupProcess:
             if proc.is_alive():
                 proc.kill()
                 proc.join(timeout=5.0)
+        self._reap_shm()
+
+    def _reap_shm(self) -> None:
+        """Drop every shared-memory segment of the (now dead) incarnation:
+        the parent pool is unlinked outright, and the child's leftovers —
+        its free pool plus any in-flight reply segments it never got to
+        release — are swept by name prefix. Runs after the process is
+        gone, so nothing can be mid-read. A graceful child already
+        unlinked its own pool; the sweep then finds nothing."""
+        tr, self._transport = self._transport, None
+        if tr is not None:
+            tr.close()
+        if self._child_prefix:
+            reaped = shmt.reap_prefix(self._child_prefix,
+                                      tracked=self._seen_child_segs)
+            if reaped:
+                logger.warning(
+                    "group %d: reaped %d orphaned shm segment(s) from dead "
+                    "worker process", self.group_id, len(reaped))
+        self._seen_child_segs.clear()
+
+    def sweep_spill_files(self) -> List[str]:
+        """Unlink orphaned migration spill files (``export__*.npy``) in the
+        dead child's disk-spill directory. Spills are transfer-scoped: a
+        completed import consumed them and a failed transfer's parent-side
+        cleanup removed them, so anything still here belonged to an
+        in-flight transfer of a crashed process."""
+        spill_dir = os.path.join("/tmp", f"plexrl_{self.node_id}")
+        removed = []
+        for path in glob.glob(os.path.join(spill_dir, "export__*.npy")):
+            try:
+                os.unlink(path)
+                removed.append(path)
+            except OSError:
+                pass
+        if removed:
+            logger.warning("group %d: swept %d orphaned spill file(s)",
+                           self.group_id, len(removed))
+        return removed
 
     def respawn(self) -> None:
         """Replace a dead (or wedged) worker process in place: fresh
         process on the same handle, registered deployments replayed, so
         existing :class:`WPGProxy` objects stay valid. Managed state is
         LOST — device-failure semantics; jobs re-init or restore from a
-        checkpoint. Billing survives in the parent-side ExecLog mirrors."""
+        checkpoint. Billing survives in the parent-side ExecLog mirrors.
+        The dead incarnation's shm segments and spill files are reaped
+        before the replacement starts, so a crash-looping group cannot
+        accrete ``/dev/shm`` or ``/tmp`` residue."""
         with self._lock:
             self._terminate()
+            self.sweep_spill_files()
             self.start()
             for payload in self._deployments.values():
                 self.call("create_deployment", payload)
@@ -570,20 +802,41 @@ class StateManagerProxy:
 
     # ----------------------------------------------------------- migration
     def migrate(self, job_id: str, dst: "StateManagerProxy",
-                max_inline_bytes: int = 64 << 20) -> int:
-        """Cross-process migration: export in the source child (host-staged
-        arrays; entries above ``max_inline_bytes`` spill to the disk tier
-        and travel by path), import in the destination child (re-laid-out
-        on ITS slice), then drop the source copy. Transactional like the
-        in-process path: a failed import leaves the source the sole owner
-        (``import_state`` rolls back its staged entries)."""
+                max_inline_bytes: Optional[int] = None) -> int:
+        """Cross-process migration: export in the source child, import in
+        the destination child (re-laid-out on ITS slice), then drop the
+        source copy. With shm transport the export's arrays land in the
+        source child's segment pool and the parent RELAYS the descriptors
+        to the importer untouched — written once, read (``device_put``)
+        once, both in children; the old ``export__*.npy`` disk-spill tier
+        only engages when shm is off (``max_inline_bytes`` then defaults
+        to 64 MiB per entry). Transactional like the in-process path: a
+        failed or crashed import leaves the source the sole owner
+        (``import_state`` rolls back its staged entries) and the parent
+        deletes the transfer's spill files — on success the importer
+        consumed them, on failure nobody will."""
         if not isinstance(dst, StateManagerProxy):
             raise RuntimeError(
                 "process-plane migration needs both groups in process mode")
+        if max_inline_bytes is None:
+            # shm replaces the same-host disk-spill tier entirely
+            max_inline_bytes = (1 << 62) if self.gp.shm_enabled else 64 << 20
         t0 = time.monotonic()
         payload, _ = self.gp.call(
-            "migrate_export", {"job": job_id, "max_inline": max_inline_bytes})
-        moved, _ = dst.gp.call("migrate_import", {"payload": payload})
+            "migrate_export", {"job": job_id, "max_inline": max_inline_bytes},
+            decode_reply=False)
+        segs = shmt.refs_in(payload)
+        try:
+            moved, _ = dst.gp.call("migrate_import", {"payload": payload})
+        except BaseException:
+            # import never committed (remote rollback or child death): the
+            # transfer's spill files are orphans now — ours to delete
+            _unlink_spills(payload)
+            raise
+        finally:
+            # the importer consumed (blocked on device_put) before its
+            # reply — or died; either way the source segments are done
+            self.gp.release_segments(segs)
         self.gp.call("drop_job_state", {"job": job_id})
         cross = (self.mesh_slice is not None and dst.mesh_slice is not None
                  and self.mesh_slice.devices != dst.mesh_slice.devices)
@@ -681,11 +934,24 @@ class WPGProxy:
         return result
 
     def _sync_cross_process(self, target: "WPGProxy"):
+        """Cross-child weight sync as a descriptor relay: the source child
+        writes its host params once into ITS shm pool (``sync_export``
+        reply), the parent forwards the descriptors — never touching the
+        bytes — and the target child ``device_put``s straight from the
+        mapped views (``store_params`` blocks before replying). The reply
+        triggers the release back to the source pool; a target that dies
+        mid-store still releases (or, source-dead, the segments are reaped
+        by prefix at respawn)."""
         t0 = time.monotonic()
         tree, _ = self.gp.call("sync_export",
-                               {"dep": self.spec.deployment_id})
-        target.gp.call("store_params",
-                       {"dep": target.spec.deployment_id, "tree": tree})
+                               {"dep": self.spec.deployment_id},
+                               decode_reply=False)
+        segs = shmt.refs_in(tree)
+        try:
+            target.gp.call("store_params",
+                           {"dep": target.spec.deployment_id, "tree": tree})
+        finally:
+            self.gp.release_segments(segs)
         synced = self._sm.job_bytes(self.job_prefix)
         self.exec_log.append(("sync_weights", time.monotonic() - t0))
         return {"synced_bytes": synced}

@@ -1,0 +1,524 @@
+"""Zero-copy shared-memory array transport for the process plane.
+
+The PR 9 process plane ships every execute result, ``sync_weights``
+payload, and migration entry as pickled host arrays through a
+``multiprocessing`` pipe: pickle copies the array, the kernel copies the
+frame twice more (64 KiB pipe chunks), and unpickling copies it again —
+four traversals of every byte, for payloads that are routinely hundreds of
+MiB of model state. This module moves the BYTES out of the pipe: large
+arrays are written once into a pooled ``multiprocessing.shared_memory``
+segment and the pipe carries only :class:`ShmRef` descriptors
+``(segment, offset, dtype, shape)``; the receiver maps the segment and
+reads — or ``jax.device_put``\\ s — directly from the view, with no
+intermediate pickle buffer.
+
+Lifecycle is the hard part, and most of this module:
+
+- **Pooling** (:class:`SegmentPool`): the writer packs all of one
+  message's large arrays into a single segment sized to the next power of
+  two, and a released segment returns to a free list instead of being
+  unlinked — a steady-state weight-sync loop reuses the same one or two
+  segments forever instead of churning ``shm_open``/``unlink``. The free
+  list is bounded by a high-water mark (``max_pool_bytes`` /
+  ``max_free_segments``); excess segments are unlinked largest-first.
+- **Refcounts + release acks**: a segment is ``busy`` from ``encode``
+  until the consumer acks it. For parent→child requests the child's reply
+  IS the ack (handlers consume — block on ``device_put`` — before
+  replying); for child→parent replies the parent sends an explicit
+  fire-and-forget ``shm_release`` frame after decoding. Relayed payloads
+  (cross-child sync / migrate) are released by the parent only after the
+  *destination* child's reply.
+- **Crash-safe reaping**: every segment name is prefixed with the owning
+  (parent pid, group, incarnation) — ``pxl{pid}g{gid}s{n}{side}-{seq}`` —
+  so when a child dies mid-transfer the parent can unlink everything the
+  incarnation ever created by scanning ``/dev/shm`` for the prefix
+  (:func:`reap_prefix`; falls back to the tracked-name set where there is
+  no scannable shm directory). A week-long plane never leaks ``/dev/shm``.
+- **Fallback**: arrays below ``threshold`` (or when ``/dev/shm`` is
+  unavailable / ``PLEXRL_SHM=0``) ride the pickle path unchanged. The
+  default threshold is MEASURED, not guessed: ``benchmarks/
+  transport_bench.py`` sweeps payload sizes and the pickle-vs-shm
+  crossover lands between 32 and 128 KiB across runs on one host;
+  256 KiB keeps a safety margin for small-array-heavy trees where
+  descriptor overhead bites.
+
+Module-level imports are stdlib-only: spawned group processes import this
+(via ``launch.proc_plane``) BEFORE applying their device environment, so
+neither jax nor numpy may load here. numpy is imported lazily, only once
+actual arrays cross the transport.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+logger = logging.getLogger(__name__)
+
+# Pickle-vs-shm crossover measured by benchmarks/transport_bench.py on a
+# one-host sync relay (BENCH_PR10.json, transport/crossover_kib; 32-128
+# KiB across runs): shm wins from ~128 KiB up at worst (3.5x by 1 MiB,
+# ~6x by 256 MiB). The default sits an octave above the worst measured
+# crossover for headroom — descriptor/ack overhead bites harder on trees
+# of many borderline arrays than a missed 2x win on one of them.
+DEFAULT_THRESHOLD = 256 << 10
+DEFAULT_POOL_BYTES = 1 << 30          # high-water mark per pool (free bytes)
+DEFAULT_FREE_SEGMENTS = 4             # free-list length cap
+_ALIGN = 64                           # array offsets are cache-line aligned
+_MIN_SEGMENT = 1 << 20                # round tiny packs up for better reuse
+SHM_DIR = "/dev/shm"
+
+
+def _round_segment(nbytes: int) -> int:
+    """Next power of two, floored at ``_MIN_SEGMENT`` — bounded (2x) internal
+    waste in exchange for a free list that actually gets hits."""
+    size = _MIN_SEGMENT
+    while size < nbytes:
+        size <<= 1
+    return size
+
+
+def _untrack(shm) -> None:
+    """Opt a segment out of ``resource_tracker`` right after create or
+    attach. The tracker registers on attach as well as create (bpo-39959),
+    so an attacher's exit would unlink segments the creator still owns —
+    fatal for a pool whose names outlive any one mapping. Lifecycle here
+    is explicit instead: pools unlink on destroy and parents reap dead
+    children by prefix. Registration is a set-add and unregistration a
+    set-remove that makes the tracker process spew ``KeyError`` tracebacks
+    when unbalanced, so the rule is: every create/attach is untracked
+    immediately, and :func:`_destroy_segment` re-registers just before
+    ``unlink()`` (whose internals unregister again)."""
+    try:
+        from multiprocessing import resource_tracker
+        resource_tracker.unregister(shm._name, "shared_memory")
+    except Exception:  # noqa: BLE001 - best-effort on every platform
+        pass
+
+
+def shm_available() -> bool:
+    """True when pooled shared-memory transport can run here: the stdlib
+    module works, a segment can actually be created (a container without
+    ``/dev/shm`` raises), and ``PLEXRL_SHM`` does not force it off."""
+    if os.environ.get("PLEXRL_SHM", "").lower() in ("0", "off", "false"):
+        return False
+    try:
+        from multiprocessing import shared_memory
+        probe = shared_memory.SharedMemory(create=True, size=_ALIGN)
+        probe.close()
+        probe.unlink()
+        return True
+    except Exception:  # noqa: BLE001 - any failure means "use pickle"
+        return False
+
+
+# --------------------------------------------------------------- descriptor
+@dataclasses.dataclass(frozen=True)
+class ShmRef:
+    """What the pipe carries instead of an array: where the bytes live.
+
+    ``dtype`` is the numpy dtype string; bfloat16 (no portable numpy
+    string) travels as ``"bfloat16"`` with the bytes stored as uint16."""
+    segment: str
+    offset: int
+    shape: Tuple[int, ...]
+    dtype: str
+    nbytes: int
+
+
+def _wire_dtype(arr) -> Tuple[str, Any]:
+    """(descriptor dtype string, array view safe to memcpy). bf16 has no
+    numpy-native string form, so it rides as a uint16 view."""
+    import numpy as np
+    if arr.dtype.name == "bfloat16":
+        return "bfloat16", arr.view(np.uint16)
+    return arr.dtype.str, arr
+
+
+def _view_dtype(dtype: str):
+    import numpy as np
+    if dtype == "bfloat16":
+        return np.uint16
+    return np.dtype(dtype)
+
+
+# ---------------------------------------------------------------- free pool
+class SegmentPool:
+    """Writer-side pool of named shared-memory segments.
+
+    ``alloc`` prefers the smallest free segment that fits; a miss creates a
+    new segment named ``{prefix}-{seq}`` (monotonic seq: names are never
+    reused, so a stale reader-side attachment can never alias new data).
+    ``release`` returns segments to the free list, trimming it back under
+    the high-water mark largest-first. Thread-safe — the parent side is
+    driven by per-group dispatch threads."""
+
+    def __init__(self, prefix: str,
+                 max_pool_bytes: int = DEFAULT_POOL_BYTES,
+                 max_free_segments: int = DEFAULT_FREE_SEGMENTS):
+        self.prefix = prefix
+        self.max_pool_bytes = max_pool_bytes
+        self.max_free_segments = max_free_segments
+        self._seq = 0
+        self._free: List[Any] = []         # SharedMemory, sorted by size
+        self._busy: Dict[str, Any] = {}    # name -> SharedMemory
+        self._lock = threading.Lock()
+        self.created = 0                   # segments ever created (stats)
+        self.reused = 0                    # allocs served from the free list
+
+    # ------------------------------------------------------------- alloc
+    def alloc(self, nbytes: int):
+        """A segment with capacity >= nbytes, marked busy until released."""
+        from multiprocessing import shared_memory
+        with self._lock:
+            fit = [s for s in self._free if s.size >= nbytes]
+            if fit:
+                shm = min(fit, key=lambda s: s.size)
+                self._free.remove(shm)
+                self._busy[shm.name] = shm
+                self.reused += 1
+                return shm
+            self._seq += 1
+            name = f"{self.prefix}-{self._seq}"
+        shm = shared_memory.SharedMemory(
+            name=name, create=True, size=_round_segment(nbytes))
+        _untrack(shm)
+        with self._lock:
+            self._busy[shm.name] = shm
+            self.created += 1
+        return shm
+
+    # ----------------------------------------------------------- release
+    def release(self, names) -> int:
+        """Return busy segments to the free list (the consumer's ack),
+        enforcing the high-water mark. Unknown names are ignored — a
+        release can race a pool that was destroyed by a respawn."""
+        victims = []
+        n = 0
+        with self._lock:
+            for name in names:
+                shm = self._busy.pop(name, None)
+                if shm is None:
+                    continue
+                self._free.append(shm)
+                n += 1
+            self._free.sort(key=lambda s: s.size)
+            while (len(self._free) > self.max_free_segments
+                   or sum(s.size for s in self._free) > self.max_pool_bytes):
+                victims.append(self._free.pop())   # largest first
+        for shm in victims:
+            _destroy_segment(shm)
+        return n
+
+    # ------------------------------------------------------------- stats
+    def names(self) -> List[str]:
+        with self._lock:
+            return list(self._busy) + [s.name for s in self._free]
+
+    def free_bytes(self) -> int:
+        with self._lock:
+            return sum(s.size for s in self._free)
+
+    def busy_count(self) -> int:
+        with self._lock:
+            return len(self._busy)
+
+    # ----------------------------------------------------------- destroy
+    def destroy(self) -> None:
+        """Unlink everything — busy included (only correct once no reader
+        can still arrive: child exit, or parent teardown of a dead child)."""
+        with self._lock:
+            segs = list(self._busy.values()) + self._free
+            self._busy.clear()
+            self._free = []
+        for shm in segs:
+            _destroy_segment(shm)
+
+
+def _destroy_segment(shm) -> None:
+    try:
+        shm.close()
+    except (BufferError, OSError):
+        pass
+    try:
+        # pool segments were untracked at alloc; re-register so the
+        # unregister inside stdlib unlink() stays balanced (an unbalanced
+        # one makes the tracker process spew KeyError tracebacks)
+        from multiprocessing import resource_tracker
+        resource_tracker.register(shm._name, "shared_memory")
+    except Exception:  # noqa: BLE001
+        pass
+    try:
+        shm.unlink()
+    except (FileNotFoundError, OSError):
+        _untrack(shm)    # unlink raised before its internal unregister ran
+
+
+# ------------------------------------------------------------ reader cache
+class SegmentCache:
+    """Receiver-side attachments, keyed by segment name.
+
+    Pool recycling means the same few names repeat for the life of a
+    channel; attaching once and keeping the mapping makes the steady-state
+    receive path mmap-free. Bounded LRU: writer-side trims unlink segments
+    whose names never appear again, so stale attachments are evicted (safe
+    between messages — decoded views never outlive message handling)."""
+
+    def __init__(self, max_entries: int = 8):
+        self.max_entries = max_entries
+        self._shms: Dict[str, Any] = {}
+        self._order: List[str] = []
+        self.seen: set = set()       # every name ever attached (crash reap
+        #                              fallback when /dev/shm is unscannable)
+
+    def attach(self, name: str):
+        shm = self._shms.get(name)
+        if shm is None:
+            from multiprocessing import shared_memory
+            shm = shared_memory.SharedMemory(name=name)
+            _untrack(shm)
+            self._shms[name] = shm
+            self.seen.add(name)
+            self._order.append(name)
+            while len(self._order) > self.max_entries:
+                old = self._order.pop(0)
+                if old == name:
+                    self._order.append(name)
+                    continue
+                dead = self._shms.pop(old, None)
+                if dead is not None:
+                    try:
+                        dead.close()
+                    except BufferError:     # a view survived: keep mapped
+                        self._shms[old] = dead
+                        self._order.insert(0, old)
+                        break
+        else:
+            self._order.remove(name)
+            self._order.append(name)
+        return shm
+
+    def view(self, ref: ShmRef):
+        """A numpy view straight over the shared buffer — zero copies. The
+        caller owns the consume-before-release contract."""
+        import numpy as np
+        shm = self.attach(ref.segment)
+        return np.ndarray(ref.shape, dtype=_view_dtype(ref.dtype),
+                          buffer=shm.buf, offset=ref.offset)
+
+    def close(self) -> None:
+        for shm in self._shms.values():
+            try:
+                shm.close()
+            except (BufferError, OSError):
+                pass
+        self._shms.clear()
+        self._order = []
+
+
+# ----------------------------------------------------------- encode/decode
+def _is_big_array(x, threshold: int) -> bool:
+    import numpy as np
+    return (isinstance(x, np.ndarray) and x.nbytes >= threshold
+            and not x.dtype.hasobject)
+
+
+def _walk(obj, fn: Callable[[Any], Any]):
+    """Structure-preserving transform over the containers that cross the
+    pipe (dict / list / tuple / namedtuple); everything else is a leaf."""
+    if isinstance(obj, dict):
+        return {k: _walk(v, fn) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        items = [_walk(v, fn) for v in obj]
+        if hasattr(obj, "_fields"):            # namedtuple
+            return type(obj)(*items)
+        return tuple(items)
+    if isinstance(obj, list):
+        return [_walk(v, fn) for v in obj]
+    return fn(obj)
+
+
+def encode(obj, pool: Optional[SegmentPool],
+           threshold: int = DEFAULT_THRESHOLD) -> Tuple[Any, List[str]]:
+    """Replace every large ndarray leaf in ``obj`` with a :class:`ShmRef`,
+    packing all of them into ONE pool segment (cache-line-aligned offsets).
+    Returns ``(encoded obj, segment names now busy)``. A tree with no
+    large arrays — or no pool — passes through untouched with no numpy
+    import (stub children stay featherweight)."""
+    import sys
+    if pool is None or "numpy" not in sys.modules:
+        return obj, []
+    import numpy as np
+
+    leaves: List[Any] = []
+
+    def collect(x):
+        if _is_big_array(x, threshold):
+            leaves.append(x)
+        return x
+
+    _walk(obj, collect)
+    if not leaves:
+        return obj, []
+
+    total = 0
+    offsets = []
+    for arr in leaves:
+        offsets.append(total)
+        total += (arr.nbytes + _ALIGN - 1) & ~(_ALIGN - 1)
+    shm = pool.alloc(total)
+
+    refs: Dict[int, ShmRef] = {}
+    for arr, off in zip(leaves, offsets):
+        if id(arr) in refs:                   # shared leaf: write once
+            continue
+        dtype, wire = _wire_dtype(arr)
+        dst = np.ndarray(wire.shape, dtype=wire.dtype,
+                         buffer=shm.buf, offset=off)
+        np.copyto(dst, wire)                  # handles any source layout
+        refs[id(arr)] = ShmRef(segment=shm.name, offset=off,
+                               shape=tuple(arr.shape), dtype=dtype,
+                               nbytes=arr.nbytes)
+
+    def swap(x):
+        r = refs.get(id(x))
+        return x if r is None else r
+
+    return _walk(obj, swap), [shm.name]
+
+
+def decode(obj, cache: SegmentCache, copy: bool = True):
+    """Materialise :class:`ShmRef` leaves back into arrays.
+
+    ``copy=True`` (default) returns owning arrays — one memcpy, the safe
+    mode for results that outlive the message (client futures, host-tier
+    state). ``copy=False`` returns raw views for consumers that drain them
+    before the segment is released (``device_put`` + block): the actual
+    zero-copy path."""
+    if not has_refs(obj):
+        return obj
+    import numpy as np
+
+    def mat(x):
+        if not isinstance(x, ShmRef):
+            return x
+        view = cache.view(x)
+        if x.dtype == "bfloat16":
+            import ml_dtypes
+            view = view.view(ml_dtypes.bfloat16)
+        return np.array(view) if copy else view
+
+    return _walk(obj, mat)
+
+
+def has_refs(obj) -> bool:
+    found = []
+
+    def probe(x):
+        if isinstance(x, ShmRef):
+            found.append(x)
+        return x
+
+    _walk(obj, probe)
+    return bool(found)
+
+
+def refs_in(obj) -> List[str]:
+    """Distinct segment names referenced by ``obj`` (release bookkeeping
+    for relayed payloads the parent never decodes)."""
+    names: List[str] = []
+
+    def probe(x):
+        if isinstance(x, ShmRef) and x.segment not in names:
+            names.append(x.segment)
+        return x
+
+    _walk(obj, probe)
+    return names
+
+
+# ------------------------------------------------------------ crash reaping
+def reap_prefix(prefix: str, tracked=()) -> List[str]:
+    """Unlink every shared-memory segment whose name starts with ``prefix``
+    — the parent's crash-safe sweep of a dead incarnation. Scans the shm
+    directory where one exists (Linux); otherwise falls back to the
+    explicit ``tracked`` name set. Idempotent: missing segments are not an
+    error (a graceful child already unlinked its own)."""
+    removed: List[str] = []
+    if os.path.isdir(SHM_DIR):
+        try:
+            names = [n for n in os.listdir(SHM_DIR) if n.startswith(prefix)]
+        except OSError:
+            names = []
+        for name in names:
+            try:
+                os.unlink(os.path.join(SHM_DIR, name))
+                removed.append(name)
+            except OSError:
+                pass
+        return removed
+    from multiprocessing import shared_memory
+    for name in tracked:
+        if not name.startswith(prefix):
+            continue
+        try:
+            # attach registers with the tracker; unlink() unregisters —
+            # balanced, so no _untrack here
+            shm = shared_memory.SharedMemory(name=name)
+            shm.close()
+            shm.unlink()
+            removed.append(name)
+        except (FileNotFoundError, OSError):
+            pass
+    return removed
+
+
+# -------------------------------------------------------------- the bundle
+class Transport:
+    """One side of a channel: a writer pool (under ``prefix``) plus a
+    reader cache for the peer's segments. ``enabled=False`` (or arrays
+    under the threshold) degrades every call to a clean pickle-path no-op,
+    so callers never branch."""
+
+    def __init__(self, prefix: str, enabled: bool = True,
+                 threshold: int = DEFAULT_THRESHOLD,
+                 max_pool_bytes: int = DEFAULT_POOL_BYTES):
+        self.prefix = prefix
+        self.enabled = enabled
+        self.threshold = threshold
+        self._pool: Optional[SegmentPool] = None
+        self._max_pool_bytes = max_pool_bytes
+        self.cache = SegmentCache()
+
+    @property
+    def pool(self) -> Optional[SegmentPool]:
+        if not self.enabled:
+            return None
+        if self._pool is None:
+            self._pool = SegmentPool(self.prefix,
+                                     max_pool_bytes=self._max_pool_bytes)
+        return self._pool
+
+    def encode(self, obj) -> Tuple[Any, List[str]]:
+        if not self.enabled:
+            return obj, []
+        return encode(obj, self.pool, self.threshold)
+
+    def decode(self, obj, copy: bool = True):
+        return decode(obj, self.cache, copy=copy)
+
+    def release(self, names) -> int:
+        if self._pool is None or not names:
+            return 0
+        return self._pool.release(names)
+
+    def pool_names(self) -> List[str]:
+        return [] if self._pool is None else self._pool.names()
+
+    def close(self) -> None:
+        self.cache.close()
+        if self._pool is not None:
+            self._pool.destroy()
+            self._pool = None

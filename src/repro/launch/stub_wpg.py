@@ -16,6 +16,16 @@ Per-op kwargs drive behaviour:
 - ``crash``    — hard-exit the worker process mid-op (``os._exit``), the
   robustness-test stand-in for a device/process failure
 - ``fail``     — raise inside ``execute`` (a remote op error, not a death)
+- ``payload_mb`` / ``payload_kib`` — return that much numpy array in the
+  result (cached per size across ops), so transport tests/benches drive
+  real bytes through the reply path
+- ``stored_sum`` — return the checksum of the last ``_store``\\ d params
+  (verifies a cross-child weight sync actually landed)
+
+``make_crash_store_wpg`` builds a group whose ``_store`` hard-exits — the
+stand-in for a child dying mid-``sync_weights`` with shm descriptors in
+flight. ``sync_mb`` / ``sync_kib`` in the spec overrides size
+``host_params``.
 """
 from __future__ import annotations
 
@@ -50,6 +60,24 @@ class BusyWPG:
         self._resident = False
         return 0.0
 
+    # ------------------------------------------------ weight-sync surface
+    def host_params(self) -> Dict[str, Any]:
+        """Deterministic host-staged params sized by the spec's ``sync_mb``
+        (MiB, default 1) or ``sync_kib`` override — what a cross-child sync
+        exports. Cached: repeated syncs time the transport, not arange."""
+        params = getattr(self, "_host_params", None)
+        if params is None:
+            import numpy as np
+            ov = dict(self.spec.overrides or ())
+            kib = (int(ov["sync_kib"]) if "sync_kib" in ov
+                   else int(ov.get("sync_mb", 1)) << 10)
+            n = (kib << 10) // 4
+            params = self._host_params = {"w": np.arange(n, dtype=np.float32)}
+        return params
+
+    def _store(self, params=None) -> None:
+        self.stored = params
+
     def execute(self, qop) -> Dict[str, Any]:
         t0 = time.monotonic()
         kw = qop.kwargs
@@ -71,9 +99,36 @@ class BusyWPG:
         if sleep > 0.0:
             time.sleep(sleep)
         dt = time.monotonic() - t0
-        self.exec_log.append((qop.op.value, dt))
-        return {"op": qop.op.value, "req_id": qop.req_id, "pid": os.getpid(),
-                "seconds": dt}
+        out = {"op": qop.op.value, "req_id": qop.req_id, "pid": os.getpid(),
+               "seconds": dt}
+        kib = int(kw.get("payload_kib", 0)) + (int(kw.get("payload_mb", 0))
+                                               << 10)
+        if kib > 0:
+            import numpy as np
+            # cached per size so repeated ops time the TRANSPORT, not the
+            # array construction (transport_bench reps hit this path)
+            cache = getattr(self, "_payload_cache", None)
+            if cache is None:
+                cache = self._payload_cache = {}
+            arr = cache.get(kib)
+            if arr is None:
+                arr = cache[kib] = np.arange((kib << 10) // 8,
+                                             dtype=np.float64)
+            out["data"] = arr
+        if kw.get("stored_sum"):
+            import numpy as np
+            stored = getattr(self, "stored", None) or {}
+            out["stored_sum"] = float(sum(
+                np.asarray(v, np.float64).sum() for v in stored.values()))
+        return out
+
+
+class CrashStoreWPG(BusyWPG):
+    """Dies inside ``_store`` — a target child crashing mid-sync while the
+    source child's shm descriptors are in flight."""
+
+    def _store(self, params=None) -> None:
+        os._exit(44)
 
 
 def make_busy_wpg(spec, sm) -> BusyWPG:
@@ -81,3 +136,10 @@ def make_busy_wpg(spec, sm) -> BusyWPG:
 
 
 make_busy_wpg.needs_state_manager = False
+
+
+def make_crash_store_wpg(spec, sm) -> CrashStoreWPG:
+    return CrashStoreWPG(spec, sm)
+
+
+make_crash_store_wpg.needs_state_manager = False

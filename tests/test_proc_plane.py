@@ -15,7 +15,9 @@ Stub children use ``repro.launch.stub_wpg`` (factories cross the spawn
 boundary by NAME) and never import jax, so this module stays fast; the one
 real-model test uses the same tiny overrides as test_system.py.
 """
+import glob
 import os
+import signal
 import time
 
 import numpy as np
@@ -25,8 +27,24 @@ from repro.core import api
 from repro.core.cluster import BillingRecord, PlexCluster
 from repro.core.router import Router
 from repro.core.state_manager import StateManager, Tier
+from repro.launch import shm_transport as shmt
+from repro.launch.proc_plane import GroupProcessError
 
 STUB = "repro.launch.stub_wpg:make_busy_wpg"
+CRASH_STORE = "repro.launch.stub_wpg:make_crash_store_wpg"
+
+needs_shm = pytest.mark.skipif(
+    not shmt.shm_available(), reason="no usable shared memory on this host")
+
+
+def my_shm_segments():
+    """Live /dev/shm segments created by THIS parent process's plane."""
+    prefix = f"pxl{os.getpid()}g"
+    try:
+        return sorted(n for n in os.listdir(shmt.SHM_DIR)
+                      if n.startswith(prefix))
+    except FileNotFoundError:
+        return []
 
 
 def make_proc_router(n_groups=2, factory=STUB):
@@ -287,3 +305,224 @@ def test_process_plane_overlaps_compute_bound_groups():
     assert w_procs <= 0.6 * serial, (
         f"process plane {w_procs:.3f}s vs serial {serial:.3f}s "
         f"(threads {w_threads:.3f}s)")
+
+
+# ------------------------------------------------- shared-memory transport
+@needs_shm
+def test_shm_execute_reply_roundtrip_and_no_residue():
+    """A large execute result rides shm descriptors, not the pipe: the
+    decoded value is bit-identical, the parent really saw child-pool
+    segments, and a closed plane leaves /dev/shm spotless."""
+    r = Router(process_plane=True, proc_wpg_factory=STUB)
+    spec = api.DeploymentSpec(deployment_id="dep0", job_id="job0",
+                              model_name="stub", role="train")
+    r.create_deployment(spec, group_id=0)
+    try:
+        futs = [r.submit_queued_operation(
+            api.make_op(spec, api.Op.FORWARD, i, payload_mb=4))
+            for i in range(3)]
+        r.run_until_idle(timeout=120)
+        want = np.arange((4 << 20) // 8, dtype=np.float64)
+        for f in futs:
+            got = f.result()["data"]
+            assert got.base is None           # an owning copy, not a view
+            np.testing.assert_array_equal(got, want)
+        # the replies actually used the descriptor path…
+        assert r.group_procs[0]._seen_child_segs
+        # …and pooling kept it to one segment across the repeats
+        assert len(r.group_procs[0]._seen_child_segs) == 1
+    finally:
+        r.close_processes()
+    assert my_shm_segments() == []
+
+
+@needs_shm
+def test_shm_cross_child_sync_checksum():
+    """Cross-child sync_weights as a descriptor relay: source child writes
+    its params once into ITS pool, the target child consumes the views —
+    the parent never touches the bytes — and the landed params checksum
+    exactly."""
+    mb = 4
+    r = Router(process_plane=True, proc_wpg_factory=STUB)
+    src = api.DeploymentSpec(deployment_id="src0", job_id="jobS",
+                             model_name="stub", role="train",
+                             overrides=(("sync_mb", mb),))
+    dst = api.DeploymentSpec(deployment_id="dst0", job_id="jobS",
+                             model_name="stub", role="rollout")
+    try:
+        r.create_deployment(src, group_id=0)
+        r.create_deployment(dst, group_id=1)
+        d_src, d_dst = api.Deployment(src, r), api.Deployment(dst, r)
+        f_sync = d_src.sync_weights(d_dst)
+        r.run_until_idle(timeout=120)
+        f_sync.result()
+        f_sum = r.submit_queued_operation(
+            api.make_op(dst, api.Op.FORWARD, 0, stored_sum=True))
+        r.run_until_idle(timeout=120)
+        n = (mb << 20) // 4
+        assert f_sum.result()["stored_sum"] == float(n * (n - 1) // 2)
+    finally:
+        r.close_processes()
+    assert my_shm_segments() == []
+
+
+@needs_shm
+def test_child_crash_mid_sync_with_shm_in_flight():
+    """The robustness satellite, shm edition: the TARGET child dies inside
+    ``_store`` while the source child's descriptors are in flight. The
+    sync op fails, its dependents poison, the source group keeps serving,
+    the completed-op billing mirror survives, and respawn leaves zero
+    /dev/shm residue from the dead incarnation."""
+    r = Router(process_plane=True, proc_wpg_factory=CRASH_STORE)
+    src = api.DeploymentSpec(deployment_id="src0", job_id="jobS",
+                             model_name="stub", role="train",
+                             overrides=(("sync_mb", 4),))
+    dst = api.DeploymentSpec(deployment_id="dst0", job_id="jobS",
+                             model_name="stub", role="rollout")
+    try:
+        r.create_deployment(src, group_id=0)
+        r.create_deployment(dst, group_id=1)
+        # a completed op on the doomed group: its billing must survive
+        f_pre = r.submit_queued_operation(
+            api.make_op(dst, api.Op.FORWARD, 0, sleep_s=0.01))
+        r.run_until_idle(timeout=120)
+        assert f_pre.result()["seconds"] >= 0.01
+        pre_log = list(r.wpgs["dst0"].exec_log)
+        d_src, d_dst = api.Deployment(src, r), api.Deployment(dst, r)
+        f_sync = d_src.sync_weights(d_dst)
+        f_dep = r.submit_queued_operation(
+            api.make_op(dst, api.Op.FORWARD, 1,
+                        prerequisites=(f_sync,)))
+        r.run_until_idle(timeout=120)
+        with pytest.raises((RuntimeError, GroupProcessError),
+                           match="worker process died"):
+            f_sync.result()
+        with pytest.raises(RuntimeError, match="prerequisite"):
+            f_dep.result()
+        assert r.process_health() == {0: True, 1: False}
+        assert list(r.wpgs["dst0"].exec_log) == pre_log   # billing conserved
+        # the source group survived its peer's death and still serves
+        f_ok = r.submit_queued_operation(
+            api.make_op(src, api.Op.FORWARD, 2))
+        r.run_until_idle(timeout=120)
+        assert f_ok.result()["op"] == "forward"
+        dead_prefix = f"pxl{os.getpid()}g1s1"
+        assert r.respawn_dead_groups() == [1]
+        # the dead incarnation left nothing behind in /dev/shm
+        assert not [n for n in my_shm_segments()
+                    if n.startswith(dead_prefix)]
+        f2 = r.submit_queued_operation(
+            api.make_op(dst, api.Op.FORWARD, 3))
+        r.run_until_idle(timeout=120)
+        assert f2.result()["op"] == "forward"
+    finally:
+        r.close_processes()
+    assert my_shm_segments() == []
+
+
+@needs_shm
+def test_migrate_importer_death_cleans_spills_and_segments():
+    """Killing the importing child mid-migrate with shm descriptors (and
+    forced spill files) in flight: the op raises, the source keeps sole
+    ownership of the state, the transfer's ``export__`` spills are
+    deleted, and teardown leaves no /dev/shm residue."""
+    tiny = (("num_layers", 2), ("d_model", 32), ("num_heads", 4),
+            ("num_kv_heads", 2), ("head_dim", 8), ("d_ff", 64),
+            ("vocab_size", 64), ("tie_embeddings", True))
+    r = Router(process_plane=True, shm_threshold=1024)
+    train = api.DeploymentSpec(deployment_id="train0", job_id="jobA",
+                               model_name="qwen2-0.5b", role="train",
+                               overrides=tiny)
+    other = api.DeploymentSpec(deployment_id="other0", job_id="jobB",
+                               model_name="qwen2-0.5b", role="train",
+                               overrides=tiny)
+    try:
+        r.create_deployment(train, group_id=0)
+        r.create_deployment(other, group_id=1)
+        f = r.submit_queued_operation(api.make_op(train, api.Op.INIT, 0))
+        r.run_until_idle(timeout=280)
+        assert f.result()["params"] > 0
+        bytes_before = r.state_managers[0].job_bytes("jobA:train0")
+        assert bytes_before > 0
+        os.kill(r.group_procs[1].pid(), signal.SIGKILL)
+        r.group_procs[1]._proc.join(timeout=30)
+        with pytest.raises(GroupProcessError, match="worker process died"):
+            # tiny max_inline forces the SPILL tier: its cleanup path
+            r.state_managers[0].migrate("jobA:train0", r.state_managers[1],
+                                        max_inline_bytes=2048)
+        # source still owns the state, transfer spills are gone
+        assert r.state_managers[0].job_bytes("jobA:train0") == bytes_before
+        src_node = r.group_procs[0].node_id
+        assert glob.glob(f"/tmp/plexrl_{src_node}/export__*") == []
+        with pytest.raises(GroupProcessError, match="worker process died"):
+            # default path: everything inline as shm DESCRIPTORS in flight
+            r.state_managers[0].migrate("jobA:train0", r.state_managers[1])
+        assert r.state_managers[0].job_bytes("jobA:train0") == bytes_before
+        # the export really rode the source child's segment pool (released
+        # segments persist in its free list until the child exits)
+        assert [n for n in my_shm_segments()
+                if n.startswith(f"pxl{os.getpid()}g0s1c")]
+        assert r.respawn_dead_groups() == [1]
+        assert r.process_health() == {0: True, 1: True}
+    finally:
+        r.close_processes()
+    assert my_shm_segments() == []
+
+
+def test_respawn_sweeps_orphaned_spill_files():
+    """A crash between export and import orphans the transaction's spill
+    files; respawn's sweep removes them — and ONLY them (regular
+    disk-tier state files are untouched)."""
+    r, specs = make_proc_router(n_groups=1)
+    spill_dir = f"/tmp/plexrl_{r.group_procs[0].node_id}"
+    os.makedirs(spill_dir, exist_ok=True)
+    orphan = os.path.join(spill_dir, "export__deadbeef__jobX__w.npy")
+    keeper = os.path.join(spill_dir, "jobX__w.npy")
+    try:
+        for p in (orphan, keeper):
+            with open(p, "wb") as fh:
+                fh.write(b"\x93NUMPY")
+        f_bad = r.submit_queued_operation(
+            api.make_op(specs[0], api.Op.FORWARD, 0, crash=True))
+        r.run_until_idle(timeout=120)
+        with pytest.raises(RuntimeError, match="worker process died"):
+            f_bad.result()
+        assert r.respawn_dead_groups() == [0]
+        assert not os.path.exists(orphan)     # transaction orphan swept
+        assert os.path.exists(keeper)         # real disk-tier state kept
+    finally:
+        r.close_processes()
+        for p in (orphan, keeper):
+            if os.path.exists(p):
+                os.unlink(p)
+
+
+def test_import_rollback_unlinks_spills(tmp_path):
+    """Satellite bugfix: a failing import_state deletes the transfer's
+    spill files during rollback instead of leaking them (the transfer is
+    over either way — nobody will read them again)."""
+    src = StateManager(node_id="src", disk_dir=str(tmp_path / "src"))
+    dst = StateManager(node_id="dst", disk_dir=str(tmp_path / "dst"))
+    big = np.arange(4096, dtype=np.float32)
+    src.register("jobA:dep0", {"w": big, "v": big * 2}, Tier.HOST)
+    payload = src.export_state("jobA:dep0", max_inline_bytes=1024)
+    assert len(payload["spills"]) == 2
+    # spill names are transaction-scoped: two exports never collide
+    payload2 = src.export_state("jobA:dep0", max_inline_bytes=1024)
+    assert set(payload["spills"]).isdisjoint(payload2["spills"])
+    for p in payload["spills"] + payload2["spills"]:
+        assert os.path.exists(p)
+    # corrupt the tail of the payload so the import fails mid-stage
+    payload["entries"].append(
+        {"key": "jobA:dep0/params/ghost", "nbytes": 8, "version": 0,
+         "tier": int(Tier.HOST), "is_bf16": False, "spec": None,
+         "path": str(tmp_path / "missing.npy"), "data": None})
+    with pytest.raises(Exception):
+        dst.import_state(payload)
+    assert dst.keys_for("jobA:dep0") == []            # rolled back
+    for p in payload["spills"]:
+        assert not os.path.exists(p)                  # …and spills gone
+    # the untouched second export still imports cleanly
+    assert dst.import_state(payload2) == payload2["bytes"]
+    for p in payload2["spills"]:
+        assert not os.path.exists(p)

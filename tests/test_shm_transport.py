@@ -1,0 +1,244 @@
+"""Shared-memory transport (launch/shm_transport.py) in isolation.
+
+Pool mechanics (alloc/reuse/high-water trim/destroy, name monotonicity),
+the encode/decode roundtrip over nested trees (threshold split, bf16 wire
+views, non-contiguous sources, namedtuples, shared leaves), descriptor
+probes, the pickle-path passthroughs, and crash reaping by name prefix.
+Everything here is single-process — the cross-process behaviour rides in
+tests/test_proc_plane.py where real worker processes exist.
+"""
+import collections
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch import shm_transport as shmt
+
+pytestmark = pytest.mark.skipif(
+    not shmt.shm_available(), reason="no usable shared memory on this host")
+
+
+def shm_names(prefix: str):
+    """Live /dev/shm entries under a test's segment prefix."""
+    try:
+        return sorted(n for n in os.listdir(shmt.SHM_DIR)
+                      if n.startswith(prefix))
+    except FileNotFoundError:
+        return []
+
+
+# ------------------------------------------------------------------- pool
+def test_pool_alloc_reuse_and_trim():
+    pool = shmt.SegmentPool("t-pool", max_pool_bytes=64 << 20,
+                            max_free_segments=2)
+    try:
+        a = pool.alloc(1 << 20)
+        assert a.size >= 1 << 20 and pool.busy_count() == 1
+        pool.release([a.name])
+        # same-size alloc is a free-list hit, not a new segment
+        b = pool.alloc(1 << 20)
+        assert b.name == a.name and pool.created == 1 and pool.reused == 1
+        # names are monotonic: a released-then-trimmed name never comes back
+        c = pool.alloc(4 << 20)
+        assert c.name != b.name
+        pool.release([b.name, c.name])
+        # over the free-list cap, largest segments are unlinked first
+        d = pool.alloc(8 << 20)
+        e = pool.alloc(16 << 20)
+        pool.release([d.name, e.name])
+        assert len(pool.names()) <= pool.busy_count() + 2
+        live = shm_names("t-pool")
+        assert e.name not in live         # largest got trimmed
+    finally:
+        pool.destroy()
+    assert shm_names("t-pool") == []
+
+
+def test_pool_release_unknown_name_is_noop():
+    pool = shmt.SegmentPool("t-noop")
+    try:
+        assert pool.release(["t-noop-999", "someone-else"]) == 0
+    finally:
+        pool.destroy()
+
+
+def test_pool_high_water_bytes():
+    pool = shmt.SegmentPool("t-hw", max_pool_bytes=2 << 20,
+                            max_free_segments=8)
+    try:
+        segs = [pool.alloc(1 << 20) for _ in range(4)]
+        pool.release([s.name for s in segs])
+        assert pool.free_bytes() <= 2 << 20
+    finally:
+        pool.destroy()
+
+
+# -------------------------------------------------------- encode / decode
+Point = collections.namedtuple("Point", "x y")
+
+
+def test_roundtrip_nested_tree():
+    pool = shmt.SegmentPool("t-rt")
+    cache = shmt.SegmentCache()
+    big = np.arange(1 << 18, dtype=np.float32)            # 1 MiB
+    small = np.arange(16, dtype=np.int64)                 # under threshold
+    tree = {"a": big, "b": {"c": small, "d": [big * 2, "text", 7]},
+            "p": Point(x=big * 3, y=None)}
+    try:
+        enc, segs = shmt.encode(tree, pool, threshold=64 << 10)
+        # all large leaves pack into ONE segment; small array pickles
+        assert len(segs) == 1
+        assert isinstance(enc["a"], shmt.ShmRef)
+        assert isinstance(enc["b"]["c"], np.ndarray)
+        assert isinstance(enc["p"], Point)                 # shape preserved
+        assert shmt.has_refs(enc) and shmt.refs_in(enc) == segs
+        dec = shmt.decode(enc, cache, copy=True)
+        np.testing.assert_array_equal(dec["a"], big)
+        np.testing.assert_array_equal(dec["b"]["d"][0], big * 2)
+        np.testing.assert_array_equal(dec["p"].x, big * 3)
+        assert dec["b"]["d"][1] == "text" and dec["p"].y is None
+        # copies own their data — releasing the segment can't corrupt them
+        assert dec["a"].base is None
+        pool.release(segs)
+    finally:
+        cache.close()
+        pool.destroy()
+
+
+def test_decode_views_are_zero_copy():
+    pool = shmt.SegmentPool("t-view")
+    cache = shmt.SegmentCache()
+    arr = np.arange(1 << 18, dtype=np.float32)
+    try:
+        enc, segs = shmt.encode({"w": arr}, pool, threshold=1024)
+        dec = shmt.decode(enc, cache, copy=False)
+        assert dec["w"].base is not None                   # a view, no copy
+        np.testing.assert_array_equal(dec["w"], arr)
+        del dec                                            # drop the view…
+        pool.release(segs)
+    finally:
+        cache.close()                                      # …before unmap
+        pool.destroy()
+
+
+def test_bf16_wire_roundtrip():
+    ml_dtypes = pytest.importorskip("ml_dtypes")
+    pool = shmt.SegmentPool("t-bf16")
+    cache = shmt.SegmentCache()
+    arr = np.linspace(-4, 4, 1 << 17, dtype=np.float32).astype(
+        ml_dtypes.bfloat16)
+    try:
+        enc, segs = shmt.encode({"p": arr}, pool, threshold=1024)
+        ref = enc["p"]
+        assert ref.dtype == "bfloat16" and ref.nbytes == arr.nbytes
+        dec = shmt.decode(enc, cache, copy=True)
+        assert dec["p"].dtype == ml_dtypes.bfloat16
+        np.testing.assert_array_equal(dec["p"], arr)
+        pool.release(segs)
+    finally:
+        cache.close()
+        pool.destroy()
+
+
+def test_non_contiguous_source():
+    pool = shmt.SegmentPool("t-nc")
+    cache = shmt.SegmentCache()
+    base = np.arange(1 << 18, dtype=np.float64).reshape(512, 512)
+    sliced = base[::2, ::2]                                # non-contiguous
+    assert not sliced.flags.c_contiguous
+    try:
+        enc, segs = shmt.encode({"s": sliced}, pool, threshold=1024)
+        dec = shmt.decode(enc, cache, copy=True)
+        np.testing.assert_array_equal(dec["s"], sliced)
+        pool.release(segs)
+    finally:
+        cache.close()
+        pool.destroy()
+
+
+def test_shared_leaf_written_once():
+    pool = shmt.SegmentPool("t-shared")
+    cache = shmt.SegmentCache()
+    arr = np.ones(1 << 18, np.float32)
+    try:
+        enc, segs = shmt.encode({"a": arr, "b": arr}, pool, threshold=1024)
+        assert enc["a"] is enc["b"]                        # one descriptor
+        dec = shmt.decode(enc, cache, copy=True)
+        np.testing.assert_array_equal(dec["a"], dec["b"])
+        pool.release(segs)
+    finally:
+        cache.close()
+        pool.destroy()
+
+
+def test_threshold_and_passthrough():
+    pool = shmt.SegmentPool("t-thresh")
+    small_tree = {"x": np.arange(8, dtype=np.float32), "y": 3}
+    try:
+        # everything under threshold → untouched object, no segments
+        enc, segs = shmt.encode(small_tree, pool, threshold=1 << 20)
+        assert segs == [] and enc is small_tree
+        assert not shmt.has_refs(enc)
+        # no pool (shm off) → same
+        enc2, segs2 = shmt.encode({"w": np.ones(1 << 20)}, None)
+        assert segs2 == [] and not shmt.has_refs(enc2)
+        # object-dtype arrays never take the shm path
+        objs = np.array([{"k": 1}, None], dtype=object)
+        enc3, segs3 = shmt.encode({"o": objs}, pool, threshold=0)
+        assert segs3 == []
+        # decode of a ref-free tree is identity
+        assert shmt.decode(small_tree, shmt.SegmentCache()) is small_tree
+    finally:
+        pool.destroy()
+
+
+def test_transport_bundle_disabled_is_noop():
+    tr = shmt.Transport(prefix="t-off", enabled=False)
+    big = {"w": np.ones(1 << 20, np.float32)}
+    enc, segs = tr.encode(big)
+    assert enc is big and segs == [] and tr.pool_names() == []
+    tr.close()
+    assert shm_names("t-off") == []
+
+
+# ----------------------------------------------------------------- reaping
+def test_reap_prefix_scan_and_tracked_fallback():
+    pool = shmt.SegmentPool("t-reap")
+    a = pool.alloc(1 << 20)
+    b = pool.alloc(1 << 20)
+    names = [a.name, b.name]
+    # simulate the owner dying without cleanup: drop the pool on the floor
+    del pool
+    assert set(shm_names("t-reap")) == set(names)
+    removed = shmt.reap_prefix("t-reap", tracked=names)
+    assert set(removed) == set(names)
+    assert shm_names("t-reap") == []
+    # idempotent: a second sweep finds nothing
+    assert shmt.reap_prefix("t-reap", tracked=names) == []
+    # prefix is respected — other owners' segments are never touched
+    other = shmt.SegmentPool("t-keep")
+    keep = other.alloc(1 << 20)
+    try:
+        assert shmt.reap_prefix("t-reap", tracked=[keep.name]) == []
+        assert shm_names("t-keep") == [keep.name]
+    finally:
+        other.destroy()
+
+
+def test_segment_cache_lru_eviction():
+    pool = shmt.SegmentPool("t-lru", max_free_segments=16,
+                            max_pool_bytes=1 << 30)
+    cache = shmt.SegmentCache(max_entries=2)
+    try:
+        segs = [pool.alloc(1 << 20) for _ in range(3)]
+        for s in segs:
+            np.ndarray(4, np.float32, buffer=s.buf)[:] = 1.0
+            ref = shmt.ShmRef(segment=s.name, offset=0, shape=(4,),
+                              dtype="<f4", nbytes=16)
+            np.testing.assert_array_equal(cache.view(ref), np.ones(4))
+        assert len(cache._shms) <= 2                       # oldest evicted
+        assert cache.seen == {s.name for s in segs}        # …but remembered
+    finally:
+        cache.close()
+        pool.destroy()
